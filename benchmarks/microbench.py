@@ -1,0 +1,62 @@
+"""Compression-operator microbenchmarks: us per invocation on a 1M-element
+gradient, per operator x granularity, plus the Pallas-kernel wrappers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line
+from repro.core import Granularity, apply_unitwise, make_compressor, \
+    stacked_mask
+from repro.kernels import ops
+
+D = 1 << 20
+KEY = jax.random.key(0)
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
+        else fn(*args)
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, r)
+    return (time.time() - t0) / iters * 1e6
+
+
+def operators():
+    x = jax.random.normal(KEY, (D,))
+    tree = {"blocks": {"w": x.reshape(64, -1, 128)}}
+    sm = stacked_mask(tree)
+    for name, kw in [("topk", {"ratio": 0.01}), ("randomk", {"ratio": 0.01}),
+                     ("terngrad", {}), ("qsgd", {"levels": 16}),
+                     ("signsgd", {}), ("natural", {}),
+                     ("threshold_v", {"v": 0.5}),
+                     ("adaptive_threshold", {})]:
+        c = make_compressor(name, **kw)
+        for gran in ("layerwise", "entire_model"):
+            g = Granularity(gran)
+            fn = jax.jit(lambda t, k: apply_unitwise(
+                lambda v, kk: c.sim(v, kk), g, t, sm, k))
+            us = _time(fn, tree, KEY)
+            csv_line(f"op_{name}_{gran}", us, f"d={D}")
+
+
+def kernels():
+    x = jax.random.normal(KEY, (D,))
+    for name, fn in [
+        ("kernel_qsgd", lambda: ops.qsgd_compress(x, KEY, 16)),
+        ("kernel_terngrad", lambda: ops.terngrad_compress(x, KEY)),
+        ("kernel_topk_block", lambda: ops.blockwise_topk(x, 5)),
+    ]:
+        us = _time(lambda _: fn(), None, iters=3)
+        csv_line(name, us, "interpret=True(CPU)")
+
+
+def run():
+    operators()
+    kernels()

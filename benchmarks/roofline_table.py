@@ -1,0 +1,40 @@
+"""Render the roofline table from dry-run artifacts (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+HEADERS = ("arch", "shape", "mesh", "t_comp", "t_mem", "t_coll",
+           "bottleneck", "useful", "coll_GB/dev", "fits")
+
+
+def load(art_dir: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        if f.endswith("summary.json"):
+            continue
+        with open(f) as fh:
+            d = json.load(fh)
+        rows.append(d)
+    return rows
+
+
+def render(art_dir: str = "artifacts/dryrun_baseline2"):
+    rows = load(art_dir)
+    print(",".join(HEADERS))
+    for d in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        fits = d.get("memory_per_device", {}).get("tpu_estimate_fits_16g")
+        print(f'{d["arch"]},{d["shape"]},{d["mesh"]},'
+              f'{d["t_compute"]:.4f},{d["t_memory"]:.4f},'
+              f'{d["t_collective"]:.4f},{d["bottleneck"]},'
+              f'{d["useful_flops_ratio"]:.3f},'
+              f'{d["collective_bytes_per_device"]/1e9:.3f},'
+              f'{bool(fits) if fits is not None else "?"}')
+    return rows
+
+
+if __name__ == "__main__":
+    render()

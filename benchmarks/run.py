@@ -1,0 +1,40 @@
+"""Benchmark harness: one function per paper table/figure + operator
+microbenchmarks + the dry-run roofline table.
+
+Prints ``name,us_per_call,derived`` CSV per row. Select subsets:
+  python -m benchmarks.run [--only figures|micro|roofline] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="all",
+                    choices=["all", "figures", "micro", "roofline"])
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps per figure (CI mode)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    if args.only in ("all", "micro"):
+        from benchmarks import microbench
+        microbench.run()
+    if args.only in ("all", "figures"):
+        from benchmarks import figures
+        if args.quick:
+            figures.STEPS = 30
+        for fig in figures.ALL:
+            fig()
+    if args.only in ("all", "roofline"):
+        from benchmarks.roofline_table import render
+        try:
+            render()
+        except Exception as e:  # artifacts not generated yet
+            print(f"roofline_table,0,unavailable({e})")
+
+
+if __name__ == "__main__":
+    main()

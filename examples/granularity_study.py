@@ -1,0 +1,47 @@
+"""Mini reproduction of the paper's empirical study (Table view):
+layer-wise vs entire-model accuracy for several compressors on the
+CPU-scale DAWNBench stand-ins. ~10 minutes on one CPU core.
+
+Run:  PYTHONPATH=src python examples/granularity_study.py [--steps 60]
+"""
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks.common import compare_granularities  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--model", default="resnet9",
+                    choices=["resnet9", "alexnet", "mlp"])
+    args = ap.parse_args()
+
+    runs = [
+        ("topk", {"ratio": 0.01}),
+        ("randomk", {"ratio": 0.01}),
+        ("terngrad", {}),
+        ("qsgd", {"levels": 4}),
+        ("adaptive_threshold", {"alpha": 0.05}),
+        ("threshold_v", {"v": 1e-3}),
+    ]
+    print(f"model={args.model} steps={args.steps}")
+    print(f"{'compressor':22s} {'layer-wise':>10s} {'entire':>10s} "
+          f"{'baseline':>10s}  verdict")
+    for name, kw in runs:
+        r = compare_granularities(args.model, name, steps=args.steps, **kw)
+        verdict = ("layer-wise better" if r["layerwise"] > r["entire_model"]
+                   + 0.02 else
+                   "entire-model better" if r["entire_model"] >
+                   r["layerwise"] + 0.02 else "comparable")
+        print(f"{name:22s} {r['layerwise']:10.3f} {r['entire_model']:10.3f} "
+              f"{r['baseline']:10.3f}  {verdict}")
+
+
+if __name__ == "__main__":
+    main()

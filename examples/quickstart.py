@@ -1,0 +1,60 @@
+"""Quickstart: the paper in ~60 lines.
+
+Trains a small causal LM with bidirectional compressed gradient
+aggregation (Algorithm 1) over 4 simulated workers, comparing LAYER-WISE
+vs ENTIRE-MODEL Top-k compression — the paper's central experiment.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CompressionConfig, Granularity,
+                        aggregate_simulated_workers, make_compressor)
+from repro.data import lm_batches
+from repro.models import DistConfig, Model, ModelConfig
+
+CFG = ModelConfig(name="quickstart-lm", arch_type="dense", n_layers=2,
+                  d_model=64, vocab=128, n_heads=4, n_kv_heads=2,
+                  d_head=16, d_ff=128, dtype="float32")
+WORKERS, STEPS, LR = 4, 40, 0.3
+
+
+def train(granularity: str):
+    model = Model(CFG, DistConfig())
+    params = model.init(jax.random.key(0))
+    comp = CompressionConfig(
+        qw=make_compressor("topk", ratio=0.1),       # worker-side Q_W
+        qm=make_compressor("identity"),              # master-side Q_M
+        granularity=Granularity(granularity))
+    stacked = model.stacked()
+
+    @jax.jit
+    def step(params, batch, key):
+        # each worker computes grads on its batch shard ...
+        wb = jax.tree_util.tree_map(
+            lambda x: x.reshape((WORKERS, -1) + x.shape[1:]), batch)
+        wgrads = jax.vmap(lambda b: jax.grad(
+            lambda p: model.loss(p, b, key))(params))(wb)
+        # ... compresses them per Algorithm 1, the master aggregates ...
+        g, _ = aggregate_simulated_workers(wgrads, stacked, comp, key)
+        # ... and everyone applies the same update.
+        return jax.tree_util.tree_map(lambda p, gg: p - LR * gg, params, g)
+
+    data = lm_batches(CFG.vocab, 8, 32, seed=1)
+    first = last = None
+    for i in range(STEPS):
+        batch = next(data)
+        loss = float(model.loss(params, batch, jax.random.key(9)))
+        first = loss if first is None else first
+        last = loss
+        params = step(params, batch, jax.random.fold_in(jax.random.key(2), i))
+    return first, last
+
+
+if __name__ == "__main__":
+    for gran in ("layerwise", "entire_model"):
+        first, last = train(gran)
+        print(f"{gran:13s}: loss {first:.3f} -> {last:.3f}")
+    print("Both converge; see benchmarks/figures.py for the full paper-style "
+          "accuracy comparison across six compressors.")

@@ -1,0 +1,56 @@
+"""End-to-end driver (deliverable b): train a ~small LM for a few hundred
+steps on a real device mesh with compressed communication — the same
+Engine/shard_map path the production dry-run lowers.
+
+Run (8 virtual CPU devices, ~100M-param model would need --smoke off and
+patience; the smoke variant finishes in minutes):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/train_lm_distributed.py
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+
+from repro.core import CompressionConfig, Granularity, make_compressor  # noqa
+from repro.data import lm_batches                   # noqa: E402
+from repro.launch.engine import Engine              # noqa: E402
+from repro.launch.mesh import make_host_mesh        # noqa: E402
+from repro.models import ModelConfig                # noqa: E402
+from repro.optim import OptConfig, piecewise_linear  # noqa: E402
+
+STEPS = 300
+
+CFG = ModelConfig(name="lm-8m", arch_type="dense", n_layers=4, d_model=256,
+                  vocab=2048, n_heads=8, n_kv_heads=4, d_head=32, d_ff=512,
+                  dtype="float32")
+
+
+def main():
+    mesh = make_host_mesh(data=4, model=2)
+    comp = CompressionConfig(qw=make_compressor("topk", ratio=0.05),
+                             granularity=Granularity("layerwise"),
+                             strategy="allgather")
+    eng = Engine(CFG, mesh, comp=comp,
+                 opt=OptConfig(name="momentum", lr=0.3, nesterov=True))
+    step = eng.build_train_step(piecewise_linear(0.3, STEPS, STEPS // 10))
+    params, opt_state = eng.init_state()
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{CFG.name}: {n/1e6:.1f}M params on mesh {dict(eng.sizes)}; "
+          f"wire strategy={comp.strategy} (payload actually shrinks)")
+    data = lm_batches(CFG.vocab, 32, 128, seed=0)
+    with mesh:
+        for i in range(STEPS):
+            params, opt_state, m = step(params, opt_state, next(data),
+                                        jnp.int32(i))
+            if i % 25 == 0 or i == STEPS - 1:
+                print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                      f"lr {float(m['lr']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

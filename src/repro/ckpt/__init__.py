@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import save_checkpoint, load_checkpoint, \
+    latest_checkpoint

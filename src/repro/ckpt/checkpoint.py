@@ -1,0 +1,81 @@
+"""Flat-npz checkpointing for param/optimizer pytrees.
+
+Leaves are keyed by their tree path; metadata (step, structure) rides in a
+JSON sidecar entry. On multi-host deployments each host would save its
+addressable shards (path pattern includes a shard tag); in this container
+there is one host, so shard 0 holds everything.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, *, tag: str = "ckpt",
+                    shard: int = 0) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    meta = {"step": int(step), "keys": [], "dtypes": {}}
+    for i, (k, v) in enumerate(sorted(flat.items())):
+        name = f"a{i}"
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            meta["dtypes"][name] = "bfloat16"
+            arr = arr.view(np.uint16)
+        arrays[name] = arr
+        meta["keys"].append(k)
+    path = os.path.join(directory, f"{tag}_{step:08d}_s{shard}.npz")
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+    return path
+
+
+def latest_checkpoint(directory: str, tag: str = "ckpt") -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    pat = re.compile(rf"{tag}_(\d+)_s0\.npz")
+    best, best_step = None, -1
+    for f in os.listdir(directory):
+        m = pat.match(f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, f), int(m.group(1))
+    return best
+
+
+def load_checkpoint(path: str, like) -> Tuple[int, Any]:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). Returns (step, tree)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat = {}
+        for i, k in enumerate(meta["keys"]):
+            arr = z[f"a{i}"]
+            if meta["dtypes"].get(f"a{i}") == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            flat[k] = jnp.asarray(arr)
+    ref = _flatten_with_paths(like)
+    missing = set(ref) - set(flat)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    vals = []
+    for path_t, _ in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_t)
+        vals.append(flat[key])
+    return meta["step"], jax.tree_util.tree_unflatten(treedef, vals)

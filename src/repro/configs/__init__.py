@@ -1,0 +1,3 @@
+from repro.configs.registry import (ARCH_NAMES, get_config, get_smoke,
+                                    get_long_context, config_for_shape,
+                                    all_pairs)

@@ -1,0 +1,13 @@
+"""Core library: the paper's layer-wise bidirectional compressed
+communication framework (AAAI'20, Dutta et al.)."""
+from repro.core.compressors import (Compressor, Identity, RandomK, TopK,
+                                    ThresholdV, AdaptiveThreshold, TernGrad,
+                                    QSGD, SignSGD, NaturalCompression,
+                                    make_compressor, available_compressors)
+from repro.core.granularity import (Granularity, stacked_mask, unit_dims,
+                                    num_units, apply_unitwise,
+                                    apply_unitwise_with_state)
+from repro.core.aggregation import (CompressionConfig, compressed_allreduce,
+                                    aggregate_simulated_workers,
+                                    no_compression, STRATEGIES)
+from repro.core.bits import comm_report, CommReport

@@ -1,0 +1,67 @@
+"""Communicated-bits accounting for every (operator, granularity, strategy).
+
+These are *analytic* wire sizes computed from static unit dimensions — the
+numbers a deployment would actually put on the ICI links. The dry-run
+roofline cross-checks them against the collective bytes parsed from HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core.aggregation import CompressionConfig
+from repro.core.compressors import Compressor
+
+
+@dataclasses.dataclass(frozen=True)
+class CommReport:
+    strategy: str
+    n_workers: int
+    dense_bits: int              # uncompressed fp32 allreduce reference (per unit sum)
+    uplink_bits_per_worker: int  # worker -> aggregation
+    downlink_bits_per_worker: int  # aggregation -> worker
+    compression_ratio: float     # dense / (up+down)
+
+    def total_bits_per_worker(self) -> int:
+        return self.uplink_bits_per_worker + self.downlink_bits_per_worker
+
+
+def _wire_bits(cfg: CompressionConfig) -> int:
+    return 16 if cfg.wire_dtype == "bfloat16" else 32
+
+
+def comm_report(cfg: CompressionConfig, unit_dims: List[int],
+                n_workers: int) -> CommReport:
+    """Wire cost of one aggregation step.
+
+    Ring-allreduce reference: each worker sends+receives ~2·d elements.
+    """
+    d_total = sum(unit_dims)
+    dense_bits = 2 * 32 * d_total
+
+    w = _wire_bits(cfg)
+    if cfg.strategy == "dense":
+        up = down = w * d_total  # ring AR: d out + d in (per direction ~d)
+    elif cfg.strategy == "simulated":
+        # numerically compressed but the collective still moves dense grads
+        up = down = w * d_total
+    elif cfg.strategy == "allgather":
+        payload = sum(cfg.qw.payload_bits(d) for d in unit_dims)
+        up = payload                       # contribute own payload
+        down = (n_workers - 1) * payload   # receive everyone else's
+    elif cfg.strategy == "rs_compress_ag":
+        # reduce-scatter dense wire (d elems traverse once) + all-gather of
+        # per-shard payloads
+        payload_shard = sum(cfg.qw.payload_bits(max(1, d // n_workers))
+                            for d in unit_dims)
+        up = w * d_total // 1 + payload_shard
+        down = (n_workers - 1) * payload_shard
+    elif cfg.strategy == "shared_random":
+        kept = sum(max(1, int(round(cfg.qw.ratio * d))) for d in unit_dims)
+        up = down = w * kept
+    else:  # pragma: no cover
+        raise ValueError(cfg.strategy)
+
+    total = up + down
+    return CommReport(cfg.strategy, n_workers, dense_bits, up, down,
+                      dense_bits / max(1, total))

@@ -1,0 +1,440 @@
+"""Gradient compression operators (the paper's Q_W / Q_M instances).
+
+Every operator follows the paper's Assumption 5:  E‖Q(x)‖² ≤ (1+Ω)‖x‖².
+Operators are pure functions of (array, PRNGKey); statistics (max, norms,
+thresholds) are computed over the WHOLE input array — the *granularity*
+module decides what that unit is (entire model / layer / block), which is
+exactly the paper's layer-wise vs entire-model distinction.
+
+Two interfaces per operator:
+  sim(x, key)        -> dense x_hat           (the mathematical operator,
+                                               used by the `simulated` strategy
+                                               — matches the paper's artifact)
+  encode(x, key)     -> Payload (pytree)      (static-shape wire format)
+  decode(payload, d) -> dense x_hat           (used by allgather / RS-AG
+                                               strategies; bytes on the wire
+                                               are exactly the payload leaves)
+
+All encode/decode shapes are static (TPU requirement). Data-dependent-size
+methods (threshold_v, adaptive) use a capacity-bounded payload in wire mode
+and exact masking in sim mode; bits.py accounts both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Payload = Dict[str, Array]
+
+_EPS = 1e-12
+
+
+def _flat(x: Array) -> Array:
+    return x.reshape(-1)
+
+
+def _restore(x_flat: Array, like: Array) -> Array:
+    return x_flat.reshape(like.shape).astype(like.dtype)
+
+
+def _k_of(ratio: float, d: int) -> int:
+    """Static kept-element count for a sparsification ratio (paper's k%)."""
+    return max(1, min(d, int(round(ratio * d))))
+
+
+def pack_signs(bits: Array) -> Array:
+    """Pack a {0,1} int32 vector (length multiple-of-8 padded) into uint8."""
+    d = bits.shape[0]
+    pad = (-d) % 8
+    b = jnp.pad(bits, (0, pad)).reshape(-1, 8).astype(jnp.uint8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint8))
+    return (b * weights).sum(axis=1).astype(jnp.uint8)
+
+
+def unpack_signs(packed: Array, d: int) -> Array:
+    """Inverse of pack_signs -> {0,1} int32 vector of length d."""
+    bits = (packed[:, None] >> jnp.arange(8, dtype=jnp.uint8)[None, :]) & 1
+    return bits.reshape(-1)[:d].astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base compression operator. Subclasses are frozen dataclasses so they
+    are hashable static args under jit."""
+
+    name: str = "identity"
+    unbiased: bool = True
+
+    # ---- mathematical operator (dense in / dense out) --------------------
+    def sim(self, x: Array, key: Array) -> Array:
+        return x
+
+    # ---- wire format ------------------------------------------------------
+    def encode(self, x: Array, key: Array) -> Payload:
+        return {"dense": _flat(x)}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        return payload["dense"].astype(dtype)
+
+    # ---- accounting / theory ----------------------------------------------
+    def payload_bits(self, d: int) -> int:
+        """Wire bits for one encoded unit of dimension d."""
+        return 32 * d
+
+    def omega(self, d: int) -> Optional[float]:
+        """Theoretical Ω in Assumption 5, if known in closed form."""
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    name: str = "identity"
+    unbiased: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomK(Compressor):
+    """Random-k sparsification. `scale=False` is the paper's biased Random k
+    (keep the sampled values); `scale=True` multiplies by d/k making it
+    unbiased with Ω = d/k - 1."""
+
+    name: str = "randomk"
+    ratio: float = 0.01
+    scale: bool = False
+    unbiased: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "unbiased", self.scale)
+
+    def _indices(self, d: int, key: Array) -> Array:
+        k = _k_of(self.ratio, d)
+        scores = jax.random.uniform(key, (d,))
+        _, idx = jax.lax.top_k(scores, k)
+        return idx
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x)
+        d = xf.shape[0]
+        idx = self._indices(d, key)
+        out = jnp.zeros_like(xf).at[idx].set(xf[idx])
+        if self.scale:
+            out = out * (d / _k_of(self.ratio, d))
+        return _restore(out, x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        xf = _flat(x)
+        d = xf.shape[0]
+        idx = self._indices(d, key)
+        vals = xf[idx]
+        if self.scale:
+            vals = vals * (d / _k_of(self.ratio, d))
+        return {"idx": idx.astype(jnp.int32), "val": vals}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        out = jnp.zeros((d,), dtype)
+        return out.at[payload["idx"]].set(payload["val"].astype(dtype))
+
+    def payload_bits(self, d: int) -> int:
+        k = _k_of(self.ratio, d)
+        return k * (32 + 32)
+
+    def omega(self, d: int) -> Optional[float]:
+        k = _k_of(self.ratio, d)
+        return (d / k - 1.0) if self.scale else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Top-k by magnitude (biased; Ω = 0 since ‖Q(x)‖ ≤ ‖x‖)."""
+
+    name: str = "topk"
+    ratio: float = 0.01
+    unbiased: bool = False
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x)
+        d = xf.shape[0]
+        k = _k_of(self.ratio, d)
+        _, idx = jax.lax.top_k(jnp.abs(xf), k)
+        out = jnp.zeros_like(xf).at[idx].set(xf[idx])
+        return _restore(out, x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        xf = _flat(x)
+        d = xf.shape[0]
+        k = _k_of(self.ratio, d)
+        _, idx = jax.lax.top_k(jnp.abs(xf), k)
+        return {"idx": idx.astype(jnp.int32), "val": xf[idx]}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        out = jnp.zeros((d,), dtype)
+        return out.at[payload["idx"]].set(payload["val"].astype(dtype))
+
+    def payload_bits(self, d: int) -> int:
+        return _k_of(self.ratio, d) * 64
+
+    def omega(self, d: int) -> Optional[float]:
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdV(Compressor):
+    """Keep elements with |x_i| >= v (paper's Threshold v). Data-dependent
+    count: sim mode is exact masking; wire mode keeps the top `cap_ratio`
+    among qualifying elements (capacity bound for static shapes)."""
+
+    name: str = "threshold_v"
+    v: float = 1e-3
+    cap_ratio: float = 0.25
+    unbiased: bool = False
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x)
+        out = jnp.where(jnp.abs(xf) >= self.v, xf, 0.0)
+        return _restore(out, x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        xf = _flat(x)
+        d = xf.shape[0]
+        cap = _k_of(self.cap_ratio, d)
+        mag = jnp.where(jnp.abs(xf) >= self.v, jnp.abs(xf), -1.0)
+        _, idx = jax.lax.top_k(mag, cap)
+        vals = jnp.where(mag[idx] >= 0.0, xf[idx], 0.0)
+        return {"idx": idx.astype(jnp.int32), "val": vals}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        out = jnp.zeros((d,), dtype)
+        return out.at[payload["idx"]].set(payload["val"].astype(dtype))
+
+    def payload_bits(self, d: int) -> int:
+        return _k_of(self.cap_ratio, d) * 64
+
+    def omega(self, d: int) -> Optional[float]:
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveThreshold(Compressor):
+    """AdaComp-style adaptive threshold (Chen et al. 2018, as used in the
+    paper): the threshold is a fraction `alpha` of the unit's max magnitude,
+    so it adapts per compression unit — the mechanism whose granularity
+    sensitivity the paper highlights (per-layer max vs global max)."""
+
+    name: str = "adaptive_threshold"
+    alpha: float = 0.01
+    cap_ratio: float = 0.25
+    unbiased: bool = False
+
+    def _thr(self, xf: Array) -> Array:
+        return self.alpha * jnp.max(jnp.abs(xf))
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x)
+        out = jnp.where(jnp.abs(xf) >= self._thr(xf), xf, 0.0)
+        return _restore(out, x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        xf = _flat(x)
+        d = xf.shape[0]
+        cap = _k_of(self.cap_ratio, d)
+        mag = jnp.where(jnp.abs(xf) >= self._thr(xf), jnp.abs(xf), -1.0)
+        _, idx = jax.lax.top_k(mag, cap)
+        vals = jnp.where(mag[idx] >= 0.0, xf[idx], 0.0)
+        return {"idx": idx.astype(jnp.int32), "val": vals}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        out = jnp.zeros((d,), dtype)
+        return out.at[payload["idx"]].set(payload["val"].astype(dtype))
+
+    def payload_bits(self, d: int) -> int:
+        return _k_of(self.cap_ratio, d) * 64
+
+    def omega(self, d: int) -> Optional[float]:
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TernGrad(Compressor):
+    """TernGrad (Wen et al. 2017): x -> s·sign(x)·b, b ~ Bernoulli(|x|/s),
+    s = max|x| over the compression unit. Unbiased. The per-unit scalar s is
+    exactly where layer-wise beats entire-model per the paper's §5.3."""
+
+    name: str = "terngrad"
+    unbiased: bool = True
+
+    def _quantize(self, xf: Array, key: Array):
+        s = jnp.max(jnp.abs(xf)) + _EPS
+        p = jnp.abs(xf) / s
+        b = jax.random.bernoulli(key, p).astype(jnp.int8)
+        t = (jnp.sign(xf).astype(jnp.int8) * b).astype(jnp.int8)
+        return t, s.astype(jnp.float32)
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x).astype(jnp.float32)
+        t, s = self._quantize(xf, key)
+        return _restore(t.astype(jnp.float32) * s, x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        t, s = self._quantize(_flat(x).astype(jnp.float32), key)
+        return {"tern": t, "scale": s[None]}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        return (payload["tern"].astype(jnp.float32)
+                * payload["scale"][0]).astype(dtype)
+
+    def payload_bits(self, d: int) -> int:
+        return 2 * d + 32  # 2-bit ternary + one f32 scale
+
+    def omega(self, d: int) -> Optional[float]:
+        # E‖Q(x)‖² = s·‖x‖₁ ≤ √d‖x‖₂·... — bound: ≤ √d·‖x‖² / ‖x‖ ; use the
+        # standard worst case Ω ≤ √d (loose); report None to force empirical.
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """QSGD (Alistarh et al. 2017) with s quantization levels:
+    q_i = ‖x‖₂ · sign(x_i) · ξ_i(x, s) / s where ξ is stochastic rounding of
+    s|x_i|/‖x‖₂. Unbiased; Ω = min(d/s², √d/s)."""
+
+    name: str = "qsgd"
+    levels: int = 16  # s; payload int8 holds signed levels up to 127
+    unbiased: bool = True
+
+    def _quantize(self, xf: Array, key: Array):
+        nrm = jnp.linalg.norm(xf) + _EPS
+        y = jnp.abs(xf) / nrm * self.levels
+        lo = jnp.floor(y)
+        u = jax.random.uniform(key, xf.shape)
+        lev = lo + (u < (y - lo)).astype(y.dtype)
+        q = (jnp.sign(xf) * lev).astype(jnp.int8)
+        return q, nrm.astype(jnp.float32)
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x).astype(jnp.float32)
+        q, nrm = self._quantize(xf, key)
+        return _restore(q.astype(jnp.float32) * (nrm / self.levels), x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        q, nrm = self._quantize(_flat(x).astype(jnp.float32), key)
+        return {"lev": q, "norm": nrm[None]}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        return (payload["lev"].astype(jnp.float32)
+                * (payload["norm"][0] / self.levels)).astype(dtype)
+
+    def payload_bits(self, d: int) -> int:
+        bits_per = max(2, math.ceil(math.log2(2 * self.levels + 1)))
+        return bits_per * d + 32
+
+    def omega(self, d: int) -> Optional[float]:
+        s = self.levels
+        return min(d / s**2, math.sqrt(d) / s)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignSGD(Compressor):
+    """signSGD (Bernstein et al. 2018): Q(x) = sign(x) (deterministic,
+    biased). Satisfies Assumption 6 with α=1, ‖·‖₁, R_k = O(1/BS).
+    Wire format: 1 bit/element (packed uint8)."""
+
+    name: str = "signsgd"
+    unbiased: bool = False
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x)
+        return _restore(jnp.where(xf >= 0, 1.0, -1.0).astype(xf.dtype), x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        bits = (_flat(x) >= 0).astype(jnp.int32)
+        return {"bits": pack_signs(bits)}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        b = unpack_signs(payload["bits"], d)
+        return (2.0 * b - 1.0).astype(dtype)
+
+    def payload_bits(self, d: int) -> int:
+        return d
+
+    def omega(self, d: int) -> Optional[float]:
+        return None  # ‖sign(x)‖² = d; not uniformly bounded by ‖x‖² — empirical.
+
+
+@dataclasses.dataclass(frozen=True)
+class NaturalCompression(Compressor):
+    """C_NAT (Horváth et al. 2019): stochastic rounding to powers of two.
+    Unbiased with Ω = 1/8. Wire: sign + 8-bit exponent = 9 bits."""
+
+    name: str = "natural"
+    unbiased: bool = True
+    _BIAS: int = 127
+
+    def _exponents(self, xf: Array, key: Array):
+        mag = jnp.abs(xf)
+        safe = jnp.where(mag > 0, mag, 1.0)
+        e = jnp.floor(jnp.log2(safe))
+        low = jnp.exp2(e)
+        p_up = (safe - low) / low  # in [0,1): prob of rounding to 2^{e+1}
+        up = jax.random.bernoulli(key, p_up)
+        e = e + up.astype(e.dtype)
+        e = jnp.clip(e, -126, 127)
+        e = jnp.where(mag > 0, e, -126.0)
+        zero = mag == 0
+        return e.astype(jnp.int32), jnp.sign(xf), zero
+
+    def sim(self, x: Array, key: Array) -> Array:
+        xf = _flat(x).astype(jnp.float32)
+        e, sgn, zero = self._exponents(xf, key)
+        out = jnp.where(zero, 0.0, sgn * jnp.exp2(e.astype(jnp.float32)))
+        return _restore(out, x)
+
+    def encode(self, x: Array, key: Array) -> Payload:
+        xf = _flat(x).astype(jnp.float32)
+        e, sgn, zero = self._exponents(xf, key)
+        # int16: sign(±1 or 0 for exact zero) * (exponent + bias + 1)
+        code = (sgn.astype(jnp.int32) * (e + self._BIAS + 1))
+        code = jnp.where(zero, 0, code).astype(jnp.int16)
+        return {"code": code}
+
+    def decode(self, payload: Payload, d: int, dtype=jnp.float32) -> Array:
+        code = payload["code"].astype(jnp.int32)
+        sgn = jnp.sign(code).astype(jnp.float32)
+        e = jnp.abs(code) - (self._BIAS + 1)
+        val = sgn * jnp.exp2(e.astype(jnp.float32))
+        return jnp.where(code == 0, 0.0, val).astype(dtype)
+
+    def payload_bits(self, d: int) -> int:
+        return 9 * d
+
+    def omega(self, d: int) -> Optional[float]:
+        return 0.125
+
+
+_REGISTRY = {
+    "identity": Identity,
+    "randomk": RandomK,
+    "topk": TopK,
+    "threshold_v": ThresholdV,
+    "adaptive_threshold": AdaptiveThreshold,
+    "terngrad": TernGrad,
+    "qsgd": QSGD,
+    "signsgd": SignSGD,
+    "natural": NaturalCompression,
+}
+
+
+def make_compressor(name: str, **kwargs: Any) -> Compressor:
+    """Build a compressor by name. kwargs are dataclass fields
+    (ratio=, levels=, v=, alpha=, scale=, ...)."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def available_compressors():
+    return sorted(_REGISTRY)

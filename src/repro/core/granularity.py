@@ -1,0 +1,203 @@
+"""Compression granularity: entire-model vs layer-wise vs block-wise.
+
+This module is the heart of the paper's subject. A *granularity* decides the
+unit the compressor sees:
+
+  entire_model : every gradient leaf flattened and concatenated -> ONE unit
+                 (what the THEORY of prior work assumes)
+  layerwise    : one unit per logical layer tensor (what IMPLEMENTATIONS do).
+                 Layer-stacked leaves (leading dim = L, produced by
+                 lax.scan-style parameter stacking) are vmapped over L.
+  blockwise    : fixed-size blocks of the flattened gradient (beyond-paper;
+                 Lemma 1 covers any partition, and this is the partition our
+                 Pallas kernels implement natively on TPU tiles)
+
+`apply_unitwise(fn, ...)` maps fn(x_flat_f32, key) -> x_flat over every unit
+and reassembles the gradient pytree. fn may contain collectives (they batch
+under vmap), which is how aggregation.py builds compressed all-reduce out of
+this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Granularity:
+    kind: str = "layerwise"  # entire_model | layerwise | blockwise
+    block_size: int = 65536  # only for blockwise
+
+    def __post_init__(self):
+        if self.kind not in ("entire_model", "layerwise", "blockwise"):
+            raise ValueError(f"unknown granularity kind {self.kind!r}")
+
+
+def stacked_mask(params, is_stacked_path: Callable[[Tuple], bool] = None):
+    """Pytree of bools marking leaves whose leading axis is a layer-stack.
+
+    Default predicate: any path element named 'blocks' / 'layers' /
+    'encoder_blocks' / 'decoder_blocks' marks a scan-stacked subtree.
+    """
+    names = ("blocks", "layers", "encoder_blocks", "decoder_blocks")
+
+    def default_pred(path):
+        for p in path:
+            key = getattr(p, "key", getattr(p, "name", None))
+            if key in names:
+                return True
+        return False
+
+    pred = is_stacked_path or default_pred
+    return jax.tree_util.tree_map_with_path(lambda p, x: pred(p), params)
+
+
+def unit_dims(grads, stacked, gran: Granularity) -> List[int]:
+    """Static per-unit dimensions d_j — feeds bits.py and theory.py."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    marks = jax.tree_util.tree_leaves(stacked)
+    total = sum(int(l.size) for l in leaves)
+    if gran.kind == "entire_model":
+        return [total]
+    if gran.kind == "blockwise":
+        b = gran.block_size
+        n_full, rem = divmod(total, b)
+        return [b] * n_full + ([rem] if rem else [])
+    dims: List[int] = []
+    for leaf, s in zip(leaves, marks):
+        if s and leaf.ndim >= 1 and leaf.shape[0] > 0:
+            L = leaf.shape[0]
+            dims.extend([int(leaf.size) // L] * L)
+        else:
+            dims.append(int(leaf.size))
+    return dims
+
+
+def num_units(grads, stacked, gran: Granularity) -> int:
+    return len(unit_dims(grads, stacked, gran))
+
+
+def _fold_unit(key: Array, uid: int) -> Array:
+    return jax.random.fold_in(key, uid)
+
+
+def apply_unitwise(fn, gran: Granularity, grads, stacked, key: Array):
+    """Map fn(x_flat: f32[d], key) -> f32[d] over every compression unit.
+
+    Returns a pytree with the structure/dtypes of `grads`.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    marks = jax.tree_util.tree_leaves(stacked)
+
+    if gran.kind == "entire_model":
+        flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+        out = fn(flat, _fold_unit(key, 0))
+        outs, off = [], 0
+        for l in leaves:
+            outs.append(out[off:off + l.size].reshape(l.shape).astype(l.dtype))
+            off += l.size
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    if gran.kind == "blockwise":
+        flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+        total = flat.shape[0]
+        b = gran.block_size
+        pad = (-total) % b
+        padded = jnp.pad(flat, (0, pad))
+        blocks = padded.reshape(-1, b)
+        nb = blocks.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(nb))
+        out = jax.vmap(fn)(blocks, keys).reshape(-1)[:total]
+        outs, off = [], 0
+        for l in leaves:
+            outs.append(out[off:off + l.size].reshape(l.shape).astype(l.dtype))
+            off += l.size
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    # layerwise
+    outs = []
+    uid = 0
+    for leaf, s in zip(leaves, marks):
+        if s and leaf.ndim >= 1 and leaf.shape[0] > 0:
+            L = leaf.shape[0]
+            x = leaf.reshape(L, -1).astype(jnp.float32)
+            base = _fold_unit(key, uid)
+            keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(L))
+            y = jax.vmap(fn)(x, keys)
+            outs.append(y.reshape(leaf.shape).astype(leaf.dtype))
+            uid += L
+        else:
+            y = fn(leaf.reshape(-1).astype(jnp.float32), _fold_unit(key, uid))
+            outs.append(y.reshape(leaf.shape).astype(leaf.dtype))
+            uid += 1
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def apply_unitwise_with_state(fn, gran: Granularity, grads, state, stacked,
+                              key: Array):
+    """Like apply_unitwise, but fn(x, m, key) -> (y, m_new) threads a
+    same-shaped per-unit state (error-feedback memory)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    sleaves = jax.tree_util.tree_leaves(state)
+    marks = jax.tree_util.tree_leaves(stacked)
+
+    if gran.kind == "entire_model":
+        flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+        mflat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in sleaves])
+        out, mnew = fn(flat, mflat, _fold_unit(key, 0))
+        y_leaves, m_leaves, off = [], [], 0
+        for l in leaves:
+            y_leaves.append(out[off:off + l.size].reshape(l.shape).astype(l.dtype))
+            m_leaves.append(mnew[off:off + l.size].reshape(l.shape).astype(l.dtype))
+            off += l.size
+        return (jax.tree_util.tree_unflatten(treedef, y_leaves),
+                jax.tree_util.tree_unflatten(treedef, m_leaves))
+
+    if gran.kind == "blockwise":
+        flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+        mflat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in sleaves])
+        total = flat.shape[0]
+        b = gran.block_size
+        pad = (-total) % b
+        blocks = jnp.pad(flat, (0, pad)).reshape(-1, b)
+        mblocks = jnp.pad(mflat, (0, pad)).reshape(-1, b)
+        nb = blocks.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(nb))
+        out, mnew = jax.vmap(fn)(blocks, mblocks, keys)
+        out = out.reshape(-1)[:total]
+        mnew = mnew.reshape(-1)[:total]
+        y_leaves, m_leaves, off = [], [], 0
+        for l in leaves:
+            y_leaves.append(out[off:off + l.size].reshape(l.shape).astype(l.dtype))
+            m_leaves.append(mnew[off:off + l.size].reshape(l.shape).astype(l.dtype))
+            off += l.size
+        return (jax.tree_util.tree_unflatten(treedef, y_leaves),
+                jax.tree_util.tree_unflatten(treedef, m_leaves))
+
+    y_leaves, m_leaves = [], []
+    uid = 0
+    for leaf, mleaf, s in zip(leaves, sleaves, marks):
+        if s and leaf.ndim >= 1 and leaf.shape[0] > 0:
+            L = leaf.shape[0]
+            x = leaf.reshape(L, -1).astype(jnp.float32)
+            m = mleaf.reshape(L, -1).astype(jnp.float32)
+            base = _fold_unit(key, uid)
+            keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(L))
+            y, mnew = jax.vmap(fn)(x, m, keys)
+            y_leaves.append(y.reshape(leaf.shape).astype(leaf.dtype))
+            m_leaves.append(mnew.reshape(leaf.shape).astype(leaf.dtype))
+            uid += L
+        else:
+            y, mnew = fn(leaf.reshape(-1).astype(jnp.float32),
+                         mleaf.reshape(-1).astype(jnp.float32),
+                         _fold_unit(key, uid))
+            y_leaves.append(y.reshape(leaf.shape).astype(leaf.dtype))
+            m_leaves.append(mnew.reshape(leaf.shape).astype(leaf.dtype))
+            uid += 1
+    return (jax.tree_util.tree_unflatten(treedef, y_leaves),
+            jax.tree_util.tree_unflatten(treedef, m_leaves))

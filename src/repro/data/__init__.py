@@ -1,0 +1,3 @@
+from repro.data.synthetic import (lm_batches, markov_lm_batch, make_markov,
+                                  classification_batch, frames_stub,
+                                  patches_stub)

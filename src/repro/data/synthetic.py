@@ -1,0 +1,92 @@
+"""Deterministic synthetic data pipelines (no data gates in this container).
+
+Language modeling: sequences sampled from a fixed random first-order Markov
+chain over the vocab — a task with nonzero learnable structure, so loss
+decreases measurably within a few hundred steps (the convergence experiments
+need a signal, not white noise).
+
+Classification: Gaussian class prototypes + noise at CIFAR-like shapes for
+the paper's CNN study.
+
+Everything is a pure function of (seed, step) — shardable by slicing the
+batch dimension, reproducible across hosts.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def make_markov(vocab: int, seed: int = 0, concentration: float = 0.3):
+    """Row-stochastic transition matrix with low entropy (learnable)."""
+    rng = np.random.default_rng(seed)
+    logits = rng.gumbel(size=(vocab, vocab)) / concentration
+    p = np.exp(logits - logits.max(axis=1, keepdims=True))
+    p = p / p.sum(axis=1, keepdims=True)
+    return jnp.asarray(p, jnp.float32)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def markov_lm_batch(key: Array, trans: Array, batch: int, seq: int):
+    """Sample (tokens, targets) from the Markov chain; targets = next token."""
+    vocab = trans.shape[0]
+    k0, k1 = jax.random.split(key)
+    first = jax.random.randint(k0, (batch,), 0, vocab)
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, jnp.log(trans[tok] + 1e-9))
+        return nxt, nxt
+
+    keys = jax.random.split(k1, seq)
+    _, seqs = jax.lax.scan(step, first, keys)
+    seqs = jnp.concatenate([first[None], seqs], axis=0).T  # (B, S+1)
+    return {"tokens": seqs[:, :-1].astype(jnp.int32),
+            "targets": seqs[:, 1:].astype(jnp.int32)}
+
+
+def lm_batches(vocab: int, batch: int, seq: int, seed: int = 0
+               ) -> Iterator[Dict[str, Array]]:
+    """Infinite deterministic LM batch stream."""
+    trans = make_markov(vocab, seed)
+    step = 0
+    base = jax.random.key(seed)
+    while True:
+        yield markov_lm_batch(jax.random.fold_in(base, step), trans, batch,
+                              seq)
+        step += 1
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def classification_batch(key: Array, batch: int, classes: int = 10,
+                         hw: int = 32, channels: int = 3, noise: float = 0.5):
+    """(images (B,hw,hw,C), labels (B,)) — smooth (low-frequency) class
+    prototypes + pixel noise. Prototypes are 4x4 random grids bilinearly
+    upsampled so convolutional nets can detect them locally (white-noise
+    prototypes are only separable by pixel-exact templates = MLPs)."""
+    kp, kl, kn = jax.random.split(key, 3)
+    coarse = jax.random.normal(jax.random.key(1234),
+                               (classes, 4, 4, channels))
+    protos = jax.image.resize(coarse, (classes, hw, hw, channels),
+                              method="bilinear") * 2.0
+    labels = jax.random.randint(kl, (batch,), 0, classes)
+    x = protos[labels] + noise * jax.random.normal(kn, (batch, hw, hw,
+                                                        channels))
+    return {"images": x.astype(jnp.float32), "labels": labels.astype(jnp.int32)}
+
+
+def frames_stub(key: Array, batch: int, frames: int, d_model: int) -> Array:
+    """Audio frontend stub: precomputed frame embeddings (whisper carve-out)."""
+    return 0.02 * jax.random.normal(key, (batch, frames, d_model),
+                                    jnp.float32)
+
+
+def patches_stub(key: Array, batch: int, patches: int, d_model: int) -> Array:
+    """Vision frontend stub: projected patch embeddings (VLM carve-out)."""
+    return 0.02 * jax.random.normal(key, (batch, patches, d_model),
+                                    jnp.float32)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compression hot path (+ fused RMSNorm).
+
+Kernels run with interpret=True on this CPU container (validation); on a
+real TPU set REPRO_PALLAS_INTERPRET=0.
+"""
+from repro.kernels.ops import (qsgd_compress, terngrad_compress,
+                               blockwise_topk, rmsnorm)

@@ -1,0 +1,104 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding/reshaping from arbitrary flat gradients to the kernels'
+(rows, 512) tiled layout, generate the stochastic-rounding uniforms, and
+fall back to the pure-jnp reference when pallas is disabled. On this CPU
+container the kernels run with interpret=True (body executed in Python —
+correctness only); on TPU set REPRO_PALLAS_INTERPRET=0.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.qsgd import BLOCK_C, BLOCK_R, qsgd_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.terngrad import terngrad_pallas
+from repro.kernels.topk_mask import topk_mask_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _tile(x: Array):
+    """flat (d,) -> padded (R, 512) with R % BLOCK_R == 0."""
+    d = x.size
+    cols = BLOCK_C
+    rows = -(-d // cols)
+    rows = -(-rows // BLOCK_R) * BLOCK_R
+    pad = rows * cols - d
+    xt = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, cols)
+    return xt, d
+
+
+def _untile(xt: Array, d: int, shape) -> Array:
+    return xt.reshape(-1)[:d].reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("levels", "use_pallas"))
+def qsgd_compress(x: Array, key: Array, levels: int = 16,
+                  use_pallas: bool = True) -> Array:
+    """Fused QSGD quantize+dequantize over the WHOLE input (the caller
+    picks the granularity unit, per the paper)."""
+    xf = x.astype(jnp.float32)
+    norm = jnp.linalg.norm(xf.reshape(-1))
+    xt, d = _tile(xf)
+    noise = jax.random.uniform(key, xt.shape)
+    if use_pallas:
+        out = qsgd_pallas(xt, noise, norm, levels, interpret=_interpret())
+    else:
+        out = ref.qsgd_ref(xt, noise, norm, levels)
+    return _untile(out, d, x.shape).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def terngrad_compress(x: Array, key: Array, use_pallas: bool = True) -> Array:
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf))
+    xt, d = _tile(xf)
+    noise = jax.random.uniform(key, xt.shape)
+    if use_pallas:
+        out = terngrad_pallas(xt, noise, scale, interpret=_interpret())
+    else:
+        out = ref.terngrad_ref(xt, noise, scale)
+    return _untile(out, d, x.shape).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("k_per_block", "use_pallas"))
+def blockwise_topk(x: Array, k_per_block: int,
+                   use_pallas: bool = True) -> Array:
+    """Block-local top-k mask: each 512-element row keeps its k largest
+    magnitudes (the 'blockwise' granularity of core.granularity, realized
+    natively on TPU tiles)."""
+    xf = x.astype(jnp.float32)
+    xt, d = _tile(xf)
+    if use_pallas:
+        out = topk_mask_pallas(xt, k_per_block, interpret=_interpret())
+    else:
+        out = ref.topk_mask_ref(xt, k_per_block)
+    return _untile(out, d, x.shape).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("eps", "use_pallas"))
+def rmsnorm(x: Array, gamma: Array, eps: float = 1e-5,
+            use_pallas: bool = True) -> Array:
+    """(..., D) rowwise RMSNorm with D % 128 == 0."""
+    shape = x.shape
+    D = shape[-1]
+    xr = x.reshape(-1, D)
+    R = xr.shape[0]
+    from repro.kernels.rmsnorm import BLOCK_R as NR
+    pad = (-R) % NR
+    xp = jnp.pad(xr, ((0, pad), (0, 0)))
+    if use_pallas:
+        out = rmsnorm_pallas(xp, gamma, eps, interpret=_interpret())
+    else:
+        out = ref.rmsnorm_ref(xp, gamma, eps)
+    return out[:R].reshape(shape)

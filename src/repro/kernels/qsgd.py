@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: fused QSGD quantize + dequantize.
+
+Elementwise + per-element stochastic rounding — pure VPU work. The unit
+norm (layer-wise or entire-model, per the paper's granularity) is computed
+outside and broadcast in as a scalar, so the SAME kernel serves both
+granularities: the statistics unit is the caller's choice, which is
+exactly the paper's subject.
+
+Tiling: the flat gradient is reshaped to (rows, 128·LANES) and the grid
+walks row-blocks of 8·SUBLANES — (8,128)-aligned VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256          # rows per grid step (multiple of 8)
+BLOCK_C = 512          # lane columns (multiple of 128)
+_EPS = 1e-12
+
+
+def _qsgd_kernel(x_ref, u_ref, norm_ref, o_ref, *, levels: int):
+    x = x_ref[...]
+    u = u_ref[...]
+    n = jnp.maximum(norm_ref[0, 0], _EPS)
+    y = jnp.abs(x) / n * levels
+    lev = jnp.floor(y + u)
+    o_ref[...] = jnp.sign(x) * lev * (n / levels)
+
+
+def qsgd_pallas(x: jax.Array, noise: jax.Array, norm: jax.Array,
+                levels: int, *, interpret: bool = True) -> jax.Array:
+    """x, noise: (R, C) f32 with R % BLOCK_R == 0, C == BLOCK_C.
+    norm: () f32. interpret=True runs the kernel body on CPU (validation);
+    on TPU pass interpret=False."""
+    R, C = x.shape
+    assert R % BLOCK_R == 0 and C == BLOCK_C, (R, C)
+    grid = (R // BLOCK_R,)
+    return pl.pallas_call(
+        functools.partial(_qsgd_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, noise, norm.reshape(1, 1))

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the compression kernels.
+
+Each oracle is bit-compatible with its Pallas kernel given the same uniform
+noise: the kernels are deterministic functions of (x, noise, params).
+Shapes here are the kernels' canonical 2-D tiled layout (rows, 128·m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_EPS = 1e-12
+
+
+def qsgd_ref(x: Array, noise: Array, norm: Array, levels: int) -> Array:
+    """Fused QSGD quantize+dequantize against a unit-level l2 norm.
+
+    x (R, C) f32; noise (R, C) uniforms in [0,1); norm scalar f32.
+    q_i = norm * sign(x_i) * floor(|x_i|/norm * s + u_i) / s
+    """
+    n = jnp.maximum(norm, _EPS)
+    y = jnp.abs(x) / n * levels
+    lev = jnp.floor(y + noise)
+    return jnp.sign(x) * lev * (n / levels)
+
+
+def terngrad_ref(x: Array, noise: Array, scale: Array) -> Array:
+    """TernGrad quantize+dequantize: b_i ~ Bernoulli(|x_i|/scale);
+    out = scale * sign(x) * b."""
+    s = jnp.maximum(scale, _EPS)
+    b = (noise < jnp.abs(x) / s).astype(x.dtype)
+    return jnp.sign(x) * b * s
+
+
+def topk_mask_ref(x: Array, k: int, iters: int = 24) -> Array:
+    """Block-local top-k by magnitude via threshold bisection (per ROW).
+
+    Keeps the elements with |x| >= thr where thr is the bisection estimate
+    of the k-th largest magnitude (count(|x| >= thr) >= k >= count(> thr)).
+    Identical arithmetic to the Pallas kernel: 'iters' halvings of
+    [0, rowmax]. Ties at the threshold may keep slightly more than k.
+    """
+    mag = jnp.abs(x)
+    hi = jnp.max(mag, axis=-1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(i, carry):
+        lo, hi = carry
+        thr = 0.5 * (lo + hi)
+        cnt = jnp.sum(mag >= thr, axis=-1, keepdims=True)
+        new_lo = jnp.where(cnt > k, thr, lo)
+        new_hi = jnp.where(cnt > k, hi, thr)
+        return new_lo, new_hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    keep = mag >= lo
+    return x * keep.astype(x.dtype)
+
+
+def rmsnorm_ref(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
+    """Row-wise RMSNorm (every arch's hot spot)."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps)
+            * gamma.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: fused TernGrad quantize + dequantize.
+
+out = scale · sign(x) · 1[u < |x|/scale], with the per-unit scale
+(max |x| over the compression unit) computed outside — same
+granularity-polymorphic design as the QSGD kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 512
+_EPS = 1e-12
+
+
+def _terngrad_kernel(x_ref, u_ref, scale_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    s = jnp.maximum(scale_ref[0, 0], _EPS)
+    b = (u < jnp.abs(x) / s).astype(x.dtype)
+    o_ref[...] = jnp.sign(x) * b * s
+
+
+def terngrad_pallas(x: jax.Array, noise: jax.Array, scale: jax.Array,
+                    *, interpret: bool = True) -> jax.Array:
+    R, C = x.shape
+    assert R % BLOCK_R == 0 and C == BLOCK_C, (R, C)
+    return pl.pallas_call(
+        _terngrad_kernel,
+        grid=(R // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, noise, scale.reshape(1, 1))

@@ -1,0 +1,354 @@
+"""The distributed execution engine: shard_map'd train / prefill / serve
+steps with the paper's compressed gradient aggregation wired in.
+
+train_step (per device, inside shard_map over the full mesh):
+  1. forward/backward on the local batch shard (TP collectives inside;
+     FSDP leaves aggregate their grads in the backward hook with Q_W)
+  2. paper's Algorithm 1 on the remaining gradient leaves:
+     Q_W per worker -> collective over the DP axes -> Q_M
+  3. Q_M on the FSDP-scattered leaves (layer-wise, deterministic key)
+  4. optimizer update (state sharded like the params)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+from repro.core.aggregation import CompressionConfig, compressed_allreduce
+from repro.core.granularity import Granularity, apply_unitwise
+from repro.models.config import InputShape, ModelConfig
+from repro.models.dist import DistConfig
+from repro.models.model import Model
+from repro.optim import OptConfig, apply_updates, init_opt_state
+
+Array = jax.Array
+
+
+def _partition(tree, mask):
+    """Split tree into (true_subtree, false_subtree) with None placeholders."""
+    t = jax.tree_util.tree_map(lambda x, m: x if m else None, tree, mask)
+    f = jax.tree_util.tree_map(lambda x, m: None if m else x, tree, mask)
+    return t, f
+
+
+def _merge(t, f):
+    return jax.tree_util.tree_map(lambda a, b: a if b is None else b, t, f,
+                                  is_leaf=lambda x: x is None)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, mesh, *,
+                 comp: Optional[CompressionConfig] = None,
+                 opt: Optional[OptConfig] = None,
+                 remat: bool = True):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        has_pod = "pod" in self.sizes
+        dp = (("pod", "data") if has_pod else ("data",))
+        self.dist = DistConfig(tp="model",
+                               fsdp="data" if cfg.use_fsdp else None,
+                               dp=dp, sp=True)
+        self.model = Model(cfg, self.dist, self.sizes)
+        self.comp = comp
+        self.opt = opt or OptConfig()
+        self.remat = remat
+        self.dp_size = 1
+        for a in dp:
+            self.dp_size *= self.sizes[a]
+
+    # ------------------------------------------------------------------
+    # input specs (ShapeDtypeStruct stand-ins, no allocation)
+    # ------------------------------------------------------------------
+    def batch_shapes(self, shape: InputShape) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            out = {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+                   "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+            return out
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            out["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.arch_type == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.arch_type == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+
+    def _dpp(self, shape: InputShape):
+        """Batch-dim partition: the dp axes, or None (replicated) when the
+        global batch does not divide them (long_500k, batch=1)."""
+        if shape.global_batch % self.dp_size != 0:
+            return None
+        dp = tuple(self.dist.dp)
+        return dp if len(dp) > 1 else dp[0]
+
+    def batch_pspecs(self, shape: InputShape) -> Dict[str, P]:
+        dpp = self._dpp(shape)
+        if shape.kind == "decode":
+            return {"token": P(dpp), "pos": P()}
+        out = {"tokens": P(dpp, None)}
+        if shape.kind == "train":
+            out["targets"] = P(dpp, None)
+        if self.cfg.arch_type == "vlm":
+            out["patch_embeds"] = P(dpp, None, None)
+        if self.cfg.arch_type == "audio":
+            out["frames"] = P(dpp, None, None)
+        return out
+
+    def _sharded_sds(self, sds_tree, pspec_tree):
+        def attach(s, p):
+            if s is None:
+                return None
+            return jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(self.mesh, p))
+        return jax.tree_util.tree_map(attach, sds_tree, pspec_tree,
+                                      is_leaf=lambda x: x is None)
+
+    def input_specs(self, shape: InputShape):
+        """(args_sds, in_specs) for the step of this shape's kind."""
+        if shape.kind == "train":
+            return self.train_input_specs(shape)
+        if shape.kind == "prefill":
+            b = self._sharded_sds(self.batch_shapes(shape),
+                                  self.batch_pspecs(shape))
+            return (b,), (self.batch_pspecs(shape),)
+        b = self._sharded_sds(self.batch_shapes(shape),
+                              self.batch_pspecs(shape))
+        sb = shape.global_batch % self.dp_size == 0
+        cache = self._sharded_sds(
+            self.model.cache_shapes(shape.seq_len, shape.global_batch),
+            self.model.cache_pspecs(sb))
+        return (b, cache), (self.batch_pspecs(shape),
+                            self.model.cache_pspecs(sb))
+
+    def train_input_specs(self, shape: InputShape):
+        params = self._sharded_sds(self.model.param_shapes(),
+                                   self.model.param_pspecs())
+        opt_sds = jax.eval_shape(partial(init_opt_state, self.opt),
+                                 self.model.param_shapes())
+        opt_ps = self._opt_pspecs()
+        opt = self._sharded_sds(opt_sds, opt_ps)
+        batch = self._sharded_sds(self.batch_shapes(shape),
+                                  self.batch_pspecs(shape))
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        return (params, opt, batch, step), (
+            self.model.param_pspecs(), opt_ps, self.batch_pspecs(shape), P())
+
+    def _opt_pspecs(self):
+        pp = self.model.param_pspecs()
+        if self.opt.name == "sgd":
+            return {}
+        if self.opt.name == "momentum":
+            return {"m": pp}
+        return {"m": pp, "v": pp, "count": P()}
+
+    # ------------------------------------------------------------------
+    # train step
+    # ------------------------------------------------------------------
+    def _aggregate_grads(self, grads, key):
+        """Paper's Algorithm 1 over the DP axes."""
+        model, dist, comp = self.model, self.dist, self.comp
+        stacked = model.stacked()
+        fsdp_mask = model.fsdp_mask()
+        g_fsdp, g_rest = _partition(grads, fsdp_mask)
+        s_fsdp, s_rest = _partition(stacked, fsdp_mask)
+
+        if comp is None or comp.strategy == "dense":
+            agg_rest, _ = compressed_allreduce(
+                g_rest, s_rest,
+                comp or CompressionConfig(strategy="dense"),
+                dist.dp, key, self.dp_size)
+            return _merge(g_fsdp, agg_rest)
+
+        # rest leaves: full bidirectional pipeline
+        agg_rest, _ = compressed_allreduce(g_rest, s_rest, comp, dist.dp,
+                                           key, self.dp_size)
+        # fsdp leaves: Q_W already applied in the backward hook; grads are
+        # scattered+averaged. Apply Q_M layer-wise (identical key on every
+        # device -> consistent master compression).
+        if comp.qm is not None and comp.qm.name != "identity":
+            mkey = jax.random.fold_in(key, 0x5EED)
+
+            def master(x, ukey):
+                return comp.qm.sim(x, ukey)
+            g_fsdp = jax.tree_util.tree_map(lambda x: x, g_fsdp)
+            g_fsdp = apply_unitwise(master, comp.granularity, g_fsdp, s_fsdp,
+                                    mkey)
+        return _merge(g_fsdp, agg_rest)
+
+    def build_train_step(self, lr_schedule=None):
+        model, cfg, opt = self.model, self.cfg, self.opt
+        dist = self.dist
+        sched = lr_schedule or (lambda s: jnp.float32(self.opt.lr))
+
+        mb = max(1, cfg.train_microbatch)
+
+        def step_fn(params, opt_state, batch, step):
+            key = jax.random.fold_in(jax.random.key(42), step)
+            comp_hook = self.comp if dist.fsdp is not None else None
+
+            def loss_fn(p, b):
+                return model.loss(p, b, key, comp=comp_hook,
+                                  remat=self.remat)
+
+            mb_eff = min(mb, batch["tokens"].shape[0])
+            if mb_eff == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                # gradient accumulation: split the LOCAL batch into mb
+                # microbatches; grads accumulate in param dtype. The FSDP
+                # backward hook compresses + reduce-scatters per microbatch
+                # (a finer worker partition — covered by Lemma 1).
+                mbatch = jax.tree_util.tree_map(
+                    lambda x: x.reshape((mb_eff, x.shape[0] // mb_eff)
+                                        + x.shape[1:]), batch)
+
+                def mb_body(carry, b_i):
+                    acc, lsum = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, b_i)
+                    acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                    return (acc, lsum + l), None
+
+                zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+                (grads, lsum), _ = jax.lax.scan(
+                    mb_body, (zeros, jnp.zeros((), jnp.float32)), mbatch)
+                inv = 1.0 / mb_eff
+                grads = jax.tree_util.tree_map(
+                    lambda g: (g * jnp.asarray(inv, g.dtype)), grads)
+                loss = lsum * inv
+            grads = self._aggregate_grads(grads, key)
+            lr = sched(step)
+            params, opt_state = apply_updates(opt, params, grads, opt_state,
+                                              lr)
+            loss = jax.lax.pmean(loss, dist.dp)
+            return params, opt_state, {"loss": loss, "lr": lr}
+
+        pp = self.model.param_pspecs()
+        ops = self._opt_pspecs()
+        # training batches always shard over the dp axes (global batch is a
+        # multiple of the dp degree for every assigned train shape)
+        bs = self.batch_pspecs(
+            InputShape("train", 1, self.dp_size, "train"))
+        mapped = shard_map(
+            step_fn, self.mesh,
+            in_specs=(pp, ops, bs, P()),
+            out_specs=(pp, ops, {"loss": P(), "lr": P()}))
+        return jax.jit(mapped, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    # inference steps
+    # ------------------------------------------------------------------
+    def build_prefill(self, shape: InputShape):
+        model = self.model
+        dpp = self._dpp(shape)
+
+        def step_fn(params, batch):
+            return model.prefill(params, batch, jax.random.key(0),
+                                 remat=self.remat)
+
+        pp = model.param_pspecs()
+        bs = self.batch_pspecs(shape)
+        sb = shape.global_batch % self.dp_size == 0
+        mapped = shard_map(
+            step_fn, self.mesh, in_specs=(pp, bs),
+            out_specs=((P(dpp, "model"), model.cache_pspecs(sb))))
+        return jax.jit(mapped)
+
+    def build_serve_step(self, shape: InputShape):
+        model = self.model
+        dpp = self._dpp(shape)
+
+        def step_fn(params, batch, cache):
+            logits, new_cache = model.decode_step(params, batch["token"],
+                                                  batch["pos"], cache)
+            return logits, new_cache
+
+        pp = model.param_pspecs()
+        cs = model.cache_pspecs(shape.global_batch % self.dp_size == 0)
+        bs = self.batch_pspecs(shape)
+        mapped = shard_map(step_fn, self.mesh, in_specs=(pp, bs, cs),
+                           out_specs=(P(dpp, "model"), cs))
+        return jax.jit(mapped, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def memory_estimate(self, shape: InputShape) -> Dict[str, float]:
+        """Analytic per-device HBM estimate for the TPU target.
+
+        The CPU backend's buffer assignment promotes bf16 compute to f32
+        (no native bf16 on CPU), inflating temp_size ~2-3x; this estimate
+        is the documented fits-in-HBM proof, with the CPU number reported
+        alongside as a (loose) upper bound. Terms:
+          params + optimizer state + gradients (train) + saved residual
+          stack (train, seq-parallel) + per-layer transients (FSDP
+          weight gathers, gathered activations, loss chunks) + KV cache.
+        """
+        cfg = self.cfg
+        bt = 2 if cfg.dtype == "bfloat16" else 4
+        tp = self.sizes.get("model", 1)
+        dpn = self.dp_size
+        chips = tp * dpn
+        n_params = cfg.param_count()
+        shard = tp * (dpn if cfg.use_fsdp else 1)
+        params = n_params * bt / shard
+        opt_mult = {"sgd": 0, "momentum": 1, "adam": 2}[self.opt.name]
+        opt = n_params * 4 * opt_mult / shard
+        B_l = max(1, shape.global_batch // dpn)
+        d = cfg.d_model
+        est = {"params": params, "opt_state": opt}
+        if shape.kind == "train":
+            est["grads"] = params
+            mb = max(1, cfg.train_microbatch)
+            B_mb = max(1, B_l // mb)
+            S_l = shape.seq_len // tp  # sequence-parallel residual stack
+            est["residual_stack"] = cfg.n_layers * B_mb * S_l * d * bt
+            # transients: gathered per-layer weights (fsdp) + ~4 copies of
+            # the gathered (B,S,d) activation + one loss chunk
+            layer_params = (n_params - 2 * cfg.vocab * d) / max(1, cfg.n_layers)
+            gathered_w = (layer_params * bt / tp) if cfg.use_fsdp else 0
+            est["layer_transients"] = gathered_w + 4 * B_mb * shape.seq_len * d * bt
+            est["loss_chunk"] = 8192 * (self.model.vocab_padded // tp) * 4 * 2
+        elif shape.kind == "prefill":
+            est["activations"] = 4 * B_l * shape.seq_len * d * bt
+            cache = self.model.cache_shapes(shape.seq_len, shape.global_batch)
+            est["cache"] = sum(
+                (x.size * x.dtype.itemsize) / chips
+                for x in jax.tree_util.tree_leaves(cache) if x is not None)
+            if cfg.use_fsdp:
+                est["layer_transients"] =                     (n_params - 2 * cfg.vocab * d) / max(1, cfg.n_layers)                     * bt / tp
+        else:  # decode: weights stay sharded (2D TP), cache dominates
+            cache = self.model.cache_shapes(shape.seq_len, shape.global_batch)
+            est["cache"] = sum(
+                (x.size * x.dtype.itemsize) / chips
+                for x in jax.tree_util.tree_leaves(cache) if x is not None)
+            est["activations"] = 8 * B_l * d * 4
+        est["total"] = sum(est.values())
+        est["fits_16g"] = est["total"] <= 16e9
+        return est
+
+    def init_state(self, seed: int = 0):
+        """Materialize params + optimizer state (small meshes / smoke)."""
+        params = self.model.init(jax.random.key(seed))
+        opt_state = init_opt_state(self.opt, params)
+        return params, opt_state

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+device initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (smoke tests use (1,1) or (2,2) host meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: Optional[int] = None):
+    """Small mesh over host CPU devices for tests."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

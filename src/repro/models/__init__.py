@@ -1,0 +1,3 @@
+from repro.models.config import ModelConfig, InputShape, INPUT_SHAPES
+from repro.models.dist import DistConfig
+from repro.models.model import Model, declare_params

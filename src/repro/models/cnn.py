@@ -1,0 +1,99 @@
+"""The paper's own benchmark models at CPU scale: a ResNet-9-style CNN,
+an AlexNet-style CNN, and an MLP for CIFAR-shaped classification.
+
+Used by the §Repro benchmarks (layer-wise vs entire-model compression,
+Figures 2-8 of the paper) with synthetic CIFAR-shaped data. Params are a
+nested dict whose "blocks"-free structure makes every tensor its own
+layer-wise compression unit — matching the paper's per-layer setup.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet9_cifar import CNNConfig
+
+Array = jax.Array
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    std = math.sqrt(2.0 / (kh * kw * cin))  # He init (relu nets)
+    return std * jax.random.normal(key, (kh, kw, cin, cout))
+
+
+def _dense_init(key, din, dout):
+    std = math.sqrt(2.0 / din)
+    return std * jax.random.normal(key, (din, dout))
+
+
+def init_cnn(cfg: CNNConfig, key) -> Dict:
+    ks = iter(jax.random.split(key, 32))
+    p: Dict = {}
+    cin = cfg.channels
+    if cfg.kind == "mlp":
+        d = cfg.hw * cfg.hw * cfg.channels
+        for i, w in enumerate(cfg.widths):
+            p[f"fc{i}_w"] = _dense_init(next(ks), d, w)
+            p[f"fc{i}_b"] = jnp.zeros((w,))
+            d = w
+        p["head_w"] = _dense_init(next(ks), d, cfg.classes)
+        p["head_b"] = jnp.zeros((cfg.classes,))
+        return p
+    for i, w in enumerate(cfg.widths):
+        p[f"conv{i}_w"] = _conv_init(next(ks), 3, 3, cin, w)
+        p[f"conv{i}_b"] = jnp.zeros((w,))
+        if cfg.kind == "resnet9":
+            p[f"res{i}a_w"] = _conv_init(next(ks), 3, 3, w, w)
+            p[f"res{i}b_w"] = _conv_init(next(ks), 3, 3, w, w)
+        cin = w
+    p["head_w"] = _dense_init(next(ks), cfg.widths[-1], cfg.classes)
+    p["head_b"] = jnp.zeros((cfg.classes,))
+    return p
+
+
+def _chan_rms(x, eps=1e-5):
+    """Parameter-free channel RMS normalization (batchnorm stand-in —
+    keeps the unnormalized DAWNBench nets trainable at this scale)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps)
+
+
+def _conv(x, w, b=None, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y if b is None else y + b
+
+
+def cnn_forward(cfg: CNNConfig, p: Dict, images: Array) -> Array:
+    x = images
+    if cfg.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        for i in range(len(cfg.widths)):
+            h = jax.nn.relu(h @ p[f"fc{i}_w"] + p[f"fc{i}_b"])
+        return h @ p["head_w"] + p["head_b"]
+    for i in range(len(cfg.widths)):
+        x = _chan_rms(jax.nn.relu(_conv(x, p[f"conv{i}_w"], p[f"conv{i}_b"])))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        if cfg.kind == "resnet9":
+            r = _chan_rms(jax.nn.relu(_conv(x, p[f"res{i}a_w"])))
+            r = _chan_rms(jax.nn.relu(_conv(r, p[f"res{i}b_w"])))
+            x = x + r
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["head_w"] + p["head_b"]
+
+
+def cnn_loss(cfg: CNNConfig, p: Dict, batch) -> Array:
+    logits = cnn_forward(cfg, p, batch["images"])
+    labels = jax.nn.one_hot(batch["labels"], cfg.classes)
+    return -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), axis=-1))
+
+
+def cnn_accuracy(cfg: CNNConfig, p: Dict, batch) -> Array:
+    logits = cnn_forward(cfg, p, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                     ).astype(jnp.float32))

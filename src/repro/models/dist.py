@@ -1,0 +1,428 @@
+"""Distribution primitives used inside shard_map model code.
+
+Megatron-style manual tensor parallelism (column/row parallel matmuls with
+the f/g conjugate boundary ops), FSDP parameter gathering with a
+*compression hook in the backward pass* (this is where the paper's Q_W
+intercepts the data-parallel gradient reduction for FSDP-sharded
+architectures), vocab-parallel embedding/loss.
+
+All helpers accept axis=None and degrade to single-device semantics, so the
+same model code runs in a plain CPU smoke test and inside the production
+shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import CompressionConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Logical-to-mesh axis mapping.
+
+    tp    : tensor/expert-parallel axis name ("model") or None
+    fsdp  : parameter/optimizer sharding axis ("data") or None — used by the
+            three >100B architectures so params fit HBM
+    dp    : gradient-aggregation (data-parallel) axes, e.g. ("data",) or
+            ("pod", "data"). When fsdp is set it must be dp[-1].
+    sp    : sequence parallelism (Korthikanti et al.): the residual stream
+            between blocks is sharded over tp on the sequence dim; block
+            entry all-gathers it, block exit reduce-scatters. Cuts the
+            saved-activation stack by the TP degree (decisive for the
+            >100B archs at train_4k). Train/prefill only.
+    """
+    tp: Optional[str] = None
+    fsdp: Optional[str] = None
+    dp: Tuple[str, ...] = ()
+    sp: bool = False
+
+    def __post_init__(self):
+        if self.fsdp is not None and (not self.dp or self.dp[-1] != self.fsdp):
+            raise ValueError("fsdp axis must be the last dp axis")
+
+    @property
+    def extra_dp(self) -> Tuple[str, ...]:
+        """DP axes other than the fsdp axis (e.g. ('pod',))."""
+        if self.fsdp is None:
+            return tuple(self.dp)
+        return tuple(self.dp[:-1])
+
+
+# --------------------------------------------------------------------------
+# axis-optional collective helpers
+# --------------------------------------------------------------------------
+
+def psum(x, axis):
+    return x if axis in (None, ()) else jax.lax.psum(x, axis)
+
+
+def pmax(x, axis):
+    return x if axis in (None, ()) else jax.lax.pmax(x, axis)
+
+
+def pmean(x, axis):
+    return x if axis in (None, ()) else jax.lax.pmean(x, axis)
+
+
+def axis_index(axis):
+    return jnp.zeros((), jnp.int32) if axis is None else jax.lax.axis_index(axis)
+
+
+def axis_size_static(mesh_axis_sizes: dict, axis) -> int:
+    if axis in (None, ()):
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh_axis_sizes.get(a, 1)
+        return n
+    return mesh_axis_sizes.get(axis, 1)
+
+
+def all_gather(x, axis, gather_axis=0, tiled=True):
+    if axis in (None, ()):
+        return x
+    return jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def pmax_sg(x, axis):
+    """pmax with zero gradient (softmax-stabilizer use only — jax has no
+    differentiation rule for pmax)."""
+    return pmax(x, axis)
+
+
+def _pmax_sg_fwd(x, axis):
+    return pmax(x, axis), x.shape
+
+
+def _pmax_sg_bwd(axis, shape, g):
+    return (jnp.zeros(shape, g.dtype),)
+
+
+pmax_sg.defvjp(_pmax_sg_fwd, _pmax_sg_bwd)
+
+
+# --------------------------------------------------------------------------
+# Megatron f/g boundary ops
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_region_in(x, axis):
+    """Identity forward / psum backward — enter a column-parallel region.
+
+    Inserted on the activation flowing into column-parallel matmuls so that
+    gradients of everything upstream (norms, embeddings, residual stream)
+    are correctly summed over the TP axis."""
+    return x
+
+
+def _tpin_fwd(x, axis):
+    return x, None
+
+
+def _tpin_bwd(axis, _, g):
+    return (psum(g, axis),)
+
+
+tp_region_in.defvjp(_tpin_fwd, _tpin_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_region_out(x, axis):
+    """psum forward / identity backward — exit a row-parallel region.
+
+    The custom identity transpose matters: inside shard_map a plain psum
+    transposes to psum, which double-counts gradients whenever the psum'd
+    value is consumed replicated-identically on every rank (loss, logits,
+    embeddings)."""
+    return psum(x, axis)
+
+
+def _tpout_fwd(x, axis):
+    return psum(x, axis), None
+
+
+def _tpout_bwd(axis, _, g):
+    return (g,)
+
+
+tp_region_out.defvjp(_tpout_fwd, _tpout_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gather_replicated(x, axis, dim):
+    """all_gather whose output is consumed REPLICATED-identically on every
+    rank (e.g. the residual gathered before the final norm): the correct
+    adjoint is 'take my shard', not reduce-scatter (which would sum n
+    identical cotangents)."""
+    return all_gather(x, axis, gather_axis=dim, tiled=True)
+
+
+def _gr_fwd(x, axis, dim):
+    return gather_replicated(x, axis, dim), x.shape[dim]
+
+
+def _gr_bwd(axis, dim, local, g):
+    r = jax.lax.axis_index(axis)
+    return (jax.lax.dynamic_slice_in_dim(g, r * local, local, axis=dim),)
+
+
+gather_replicated.defvjp(_gr_fwd, _gr_bwd)
+
+
+def make_slice_replicated(n_shards: int):
+    """Factory: custom slice-with-allgather-adjoint for a static shard
+    count (the TP size is static at model build time)."""
+
+    @partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+    def slice_rep(x, axis, dim):
+        local = x.shape[dim] // n_shards
+        r = jax.lax.axis_index(axis)
+        return jax.lax.dynamic_slice_in_dim(x, r * local, local, axis=dim)
+
+    def fwd(x, axis, dim):
+        return slice_rep(x, axis, dim), None
+
+    def bwd(axis, dim, _, g):
+        return (all_gather(g, axis, gather_axis=dim, tiled=True),)
+
+    slice_rep.defvjp(fwd, bwd)
+    return slice_rep
+
+
+def region_in(x, dist: "DistConfig", axis: int = 1):
+    """Enter a column-parallel region.
+
+    sp=False: identity fwd / psum bwd (Megatron 'f').
+    sp=True : all-gather the seq-sharded residual (bwd = reduce-scatter)."""
+    if dist.tp is None:
+        return x
+    if dist.sp:
+        return all_gather(x, dist.tp, gather_axis=axis, tiled=True)
+    return tp_region_in(x, dist.tp)
+
+
+def region_out(x, dist: "DistConfig", axis: int = 1):
+    """Exit a row-parallel region: psum (sp=False) or reduce-scatter back to
+    the seq-sharded residual (sp=True)."""
+    if dist.tp is None:
+        return x
+    if dist.sp:
+        return jax.lax.psum_scatter(x, dist.tp, scatter_dimension=axis,
+                                    tiled=True)
+    return tp_region_out(x, dist.tp)
+
+
+# --------------------------------------------------------------------------
+# grad-sync marker for TP-replicated params with per-rank partial grads
+# (kv projections, MoE routers, MLA down-projections, ...)
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_shared(w, axis):
+    """Identity forward / psum backward on a *parameter* that is replicated
+    across TP but used differently by each rank (e.g. GQA kv projections:
+    each rank backprops only through its q-head group)."""
+    return w
+
+
+def _tps_fwd(w, axis):
+    return w, None
+
+
+def _tps_bwd(axis, _, g):
+    return (psum(g, axis),)
+
+
+tp_shared.defvjp(_tps_fwd, _tps_bwd)
+
+
+# --------------------------------------------------------------------------
+# FSDP parameter gather with compressed-gradient backward
+# --------------------------------------------------------------------------
+
+def _hook_compress(g: Array, key_bits: Array, cfg: Optional[CompressionConfig],
+                   dist: "DistConfig"):
+    """Worker-side Q_W on the local (pre-reduction) gradient of one leaf —
+    the layer-wise unit in the FSDP path. Each DP worker folds its mesh
+    index into the key (independent compressor randomness per worker)."""
+    if cfg is None or cfg.strategy in ("dense",):
+        return g
+    key = jax.random.wrap_key_data(
+        jax.lax.bitcast_convert_type(key_bits, jnp.uint32))
+    for ax in dist.dp:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+    shape = g.shape
+    out = cfg.qw.sim(g.reshape(-1).astype(jnp.float32), key)
+    return out.reshape(shape).astype(g.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def fsdp_param(w: Array, key_bits: Array, dim: int, dist: DistConfig,
+               comp: Optional[CompressionConfig]) -> Array:
+    """Gather an FSDP-sharded parameter leaf for compute.
+
+    forward : all_gather over dist.fsdp along `dim`
+    backward: Q_W(local grad)  ->  reduce-scatter over fsdp axis
+              ->  psum over remaining dp axes  -> mean over all dp
+    so the parameter gradient arrives *compressed per Algorithm 1* and
+    already scattered to match the parameter shard (ZeRO-style).
+
+    `key_bits` is the PRNG key bit-cast to float32 so it can ride through
+    custom_vjp as a differentiable arg (cotangent discarded).
+    """
+    return all_gather(w, dist.fsdp, gather_axis=dim, tiled=True)
+
+
+def _fsdp_fwd(w, key_bits, dim, dist, comp):
+    return fsdp_param(w, key_bits, dim, dist, comp), (w.shape, key_bits)
+
+
+def _fsdp_bwd(dim, dist, comp, res, g):
+    shape, key_bits = res
+    g = _hook_compress(g, key_bits, comp, dist)
+    if dist.fsdp is not None:
+        g = jax.lax.psum_scatter(g, dist.fsdp, scatter_dimension=dim,
+                                 tiled=True)
+    g = psum(g, dist.extra_dp) if dist.extra_dp else g
+    # mean over the DP group (matches the dense path's pmean semantics)
+    if dist.dp:
+        n = jax.lax.psum(jnp.ones((), g.dtype), tuple(dist.dp))
+        g = g / n
+    return g, jnp.zeros_like(key_bits)
+
+
+fsdp_param.defvjp(_fsdp_fwd, _fsdp_bwd)
+
+
+def fdot(x: Array, w: Array, fsdp_dim, dist: DistConfig) -> Array:
+    """Matmul against a weight that stays FSDP-sharded (2D tensor parallel).
+
+    Used on DECODE paths of the >100B architectures: activations are a few
+    KB per token, so contracting against the weight shard and reducing the
+    tiny activation over the fsdp axis is far cheaper than all-gathering
+    6+ GB of layer weights per step (which would also blow HBM).
+
+      fsdp_dim == w.ndim-2 (input dim sharded):
+          slice x's features to this rank's rows -> partial matmul ->
+          psum over fsdp  (column-parallel over the data axis)
+      fsdp_dim == w.ndim-1 (output dim sharded):
+          full matmul against the column shard -> all_gather the (tiny)
+          output features  (row-parallel over the data axis)
+    """
+    if fsdp_dim is None or dist.fsdp is None:
+        return x @ w
+    if fsdp_dim == w.ndim - 2:
+        d_local = w.shape[-2]
+        r = jax.lax.axis_index(dist.fsdp)
+        xs = jax.lax.dynamic_slice_in_dim(x, r * d_local, d_local, axis=-1)
+        return psum(xs @ w, dist.fsdp)
+    if fsdp_dim == w.ndim - 1:
+        return all_gather(x @ w, dist.fsdp, gather_axis=x.ndim - 1,
+                          tiled=True)
+    raise ValueError(f"unsupported fsdp_dim {fsdp_dim} for w rank {w.ndim}")
+
+
+def key_to_bits(key: Array) -> Array:
+    return jax.lax.bitcast_convert_type(jax.random.key_data(key), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# vocab-parallel embedding & cross-entropy
+# --------------------------------------------------------------------------
+
+def vp_embed(table_local: Array, ids: Array, tp_axis, vocab_global: int) -> Array:
+    """Embedding lookup with the vocab dimension sharded over tp_axis.
+
+    table_local: (V_local, d); ids: (...,) int32 global ids."""
+    v_local = table_local.shape[0]
+    offset = axis_index(tp_axis) * v_local
+    local = ids - offset
+    ok = (local >= 0) & (local < v_local)
+    emb = jnp.take(table_local, jnp.clip(local, 0, v_local - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0)
+    return tp_region_out(emb, tp_axis)  # identity bwd: see tp_region_out
+
+
+def vp_xent(logits_local: Array, targets: Array, tp_axis,
+            valid: Optional[Array] = None,
+            vocab: Optional[int] = None) -> Array:
+    """Mean cross-entropy with vocab-sharded logits (T, V_local).
+
+    Numerically stable distributed log-softmax: global max via pmax, global
+    log-sum-exp and the target logit via psum. `vocab`: true vocab size —
+    padding columns (sharding round-up) are masked out."""
+    t = logits_local.astype(jnp.float32)
+    v_local = t.shape[-1]
+    offset = axis_index(tp_axis) * v_local
+    if vocab is not None:
+        col = offset + jnp.arange(v_local)
+        t = jnp.where(col[None, :] < vocab, t, -1e30)
+    # max is a stabilizer only — cut its (unimplemented) pmax grad
+    m = pmax_sg(jnp.max(t, axis=-1), tp_axis)
+    se = tp_region_out(jnp.sum(jnp.exp(t - m[..., None]), axis=-1), tp_axis)
+    local_tgt = targets - offset
+    ok = (local_tgt >= 0) & (local_tgt < v_local)
+    tl = jnp.take_along_axis(
+        t, jnp.clip(local_tgt, 0, v_local - 1)[..., None], axis=-1)[..., 0]
+    tgt_logit = tp_region_out(jnp.where(ok, tl, 0.0), tp_axis)
+    nll = jnp.log(se) + m - tgt_logit
+    if valid is None:
+        return jnp.mean(nll)
+    w = valid.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def vp_xent_chunked(x: Array, w: Array, targets: Array, tp_axis,
+                    vocab: int, chunk: int = 8192) -> Array:
+    """Fused head-matmul + vocab-parallel cross-entropy, chunked over
+    tokens with per-chunk rematerialization — the full (T, V_local) logits
+    are never materialized (they are multi-GB at train_4k).
+
+    x (T_local, d); w (d, V_local); targets (T_local,).
+    Returns the SUM of per-token NLL over the local tokens (targets < 0
+    are padding). The caller normalizes: under SP, psum the sums over tp
+    (tp_region_out) then divide by the global token count."""
+    T, d = x.shape
+    v_local = w.shape[-1]
+    offset = axis_index(tp_axis) * v_local
+    col_ok = (offset + jnp.arange(v_local)) < vocab
+    c = min(chunk, T)
+    pad = (-T) % c
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    tp_ = jnp.pad(targets, (0, pad), constant_values=-1)
+    nchunks = xp.shape[0] // c
+
+    def chunk_nll(xc, tc):
+        t = (xc @ w).astype(jnp.float32)
+        t = jnp.where(col_ok[None, :], t, -1e30)
+        m = pmax_sg(jnp.max(t, axis=-1), tp_axis)
+        se = tp_region_out(jnp.sum(jnp.exp(t - m[..., None]), axis=-1),
+                           tp_axis)
+        lt = tc - offset
+        ok = (lt >= 0) & (lt < v_local)
+        tl = jnp.take_along_axis(t, jnp.clip(lt, 0, v_local - 1)[..., None],
+                                 axis=-1)[..., 0]
+        tgt = tp_region_out(jnp.where(ok, tl, 0.0), tp_axis)
+        nll = jnp.log(se) + m - tgt
+        return jnp.sum(jnp.where(tc >= 0, nll, 0.0))
+
+    chunk_nll = jax.checkpoint(chunk_nll)
+
+    def body(acc, xs):
+        xc, tc = xs
+        return acc + chunk_nll(xc, tc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (xp.reshape(nchunks, c, d),
+                             tp_.reshape(nchunks, c)))
+    return total  # caller normalizes (and psums over tp under SP)

@@ -1,0 +1,159 @@
+"""Flash attention in pure JAX with a recompute backward (custom_vjp).
+
+Without this, autodiff through the chunked-attention scan saves every
+S x S probability block for the backward pass (8+ GB/device/layer at
+train_4k for llama3-405b). The custom VJP stores only (q, k, v, out, lse)
+— O(S·H·dh) — and recomputes score blocks in the backward, exactly like
+the FlashAttention-2 algorithm. layers.chunked_attention remains the
+pure-jnp oracle used by the tests.
+
+Masking supports causal + sliding window (window may be a traced per-layer
+value; <= 0 disables). FLOPs note for the roofline: all (q-block, kv-block)
+pairs are computed and masked — HLO FLOPs count the full square.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _blocks(x, c):
+    B, S, H, D = x.shape
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = x.shape[1] // c
+    return x.reshape(B, n, c, H, D).transpose(1, 0, 3, 2, 4)  # (n,B,H,c,D)
+
+
+def _unblocks(xb, S):
+    n, B, H, c, D = xb.shape
+    return xb.transpose(1, 0, 3, 2, 4).reshape(B, n * c, H, D)[:, :S]
+
+
+def _mask(qpos, kpos, Sk, causal, window):
+    m = kpos[None, :] < Sk
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    w = jnp.asarray(window)
+    m = m & ((qpos[:, None] - kpos[None, :] < w) | (w <= 0))
+    return m  # (qc, kc)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_attention(q: Array, k: Array, v: Array, window: Array,
+                    causal: bool = True, q_offset: int = 0,
+                    chunk: int = 1024) -> Array:
+    """q (B,Sq,H,dh), k/v (B,Sk,H,dk/dv) — heads already GQA-expanded.
+    window: f32 scalar (may be traced — per-layer SWA patterns); <=0
+    disables. Returns (B,Sq,H,dv)."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, chunk):
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[-1]
+    c = min(chunk, Sq, Sk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qb, kb, vb = _blocks(q, c), _blocks(k, c), _blocks(v, c)
+    nq, nk = qb.shape[0], kb.shape[0]
+    qpos = q_offset + jnp.arange(nq * c).reshape(nq, c)
+    kpos = jnp.arange(nk * c).reshape(nk, c)
+
+    def q_block(args):
+        qi, qp = args
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, vi, kp = kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            s = jnp.where(_mask(qp, kp, Sk, causal, window)[None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, c), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, c), jnp.float32)
+        a0 = jnp.zeros((B, H, c, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpos))
+        l_safe = jnp.maximum(l, 1e-30)
+        o = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return o, lse
+
+    ob, lse = jax.lax.map(q_block, (qb, qpos))   # (nq,B,H,c,dv),(nq,B,H,c)
+    out = _unblocks(ob, Sq).astype(q.dtype)
+    return out, (ob, lse)
+
+
+def _flash_fwd(q, k, v, window, causal, q_offset, chunk):
+    out, (ob, lse) = _flash_fwd_impl(q, k, v, causal, window, q_offset,
+                                     chunk)
+    return out, (q, k, v, window, ob, lse)
+
+
+def _flash_bwd(causal, q_offset, chunk, res, g):
+    q, k, v, window, ob, lse = res
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[-1]
+    c = min(chunk, Sq, Sk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qb, kb, vb = _blocks(q, c), _blocks(k, c), _blocks(v, c)
+    gb = _blocks(g, c)                                   # (nq,B,H,c,dv)
+    nq, nk = qb.shape[0], kb.shape[0]
+    qpos = q_offset + jnp.arange(nq * c).reshape(nq, c)
+    kpos = jnp.arange(nk * c).reshape(nk, c)
+    # delta_i = sum_j dout_ij * out_ij   (rowwise)
+    delta = jnp.sum(gb.astype(jnp.float32) * ob, axis=-1)  # (nq,B,H,c)
+
+    def q_step(carry, xs):
+        dk, dv_ = carry                                  # (nk,B,H,c,*) f32
+        qi, gi, lsei, di, qp = xs
+
+        def kv_step(dq, kv):
+            ki, vi, kp, dk_j, dv_j = kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            s = jnp.where(_mask(qp, kp, Sk, causal, window)[None, None],
+                          s, NEG_INF)
+            p = jnp.exp(s - lsei[..., None])             # (B,H,qc,kc)
+            gif = gi.astype(jnp.float32)
+            dv_new = dv_j + jnp.einsum("bhqk,bhqd->bhkd", p, gif)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", gif, vi.astype(jnp.float32))
+            ds = p * (dp - di[..., None]) * scale
+            dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds,
+                                 ki.astype(jnp.float32))
+            dk_new = dk_j + jnp.einsum("bhqk,bhqd->bhkd", ds,
+                                       qi.astype(jnp.float32))
+            return dq, (dk_new, dv_new)
+
+        dq0 = jnp.zeros(qi.shape, jnp.float32)
+        dq, (dk, dv_) = jax.lax.scan(kv_step, dq0, (kb, vb, kpos, dk, dv_))
+        return (dk, dv_), dq
+
+    dk0 = jnp.zeros((nk, B, H, c, dh), jnp.float32)
+    dv0 = jnp.zeros((nk, B, H, c, dv), jnp.float32)
+    (dkb, dvb), dqb = jax.lax.scan(q_step, (dk0, dv0),
+                                   (qb, gb, lse, delta, qpos))
+    dq = _unblocks(dqb, Sq).astype(q.dtype)
+    dk = _unblocks(dkb, Sk).astype(k.dtype)
+    dv_out = _unblocks(dvb, Sk).astype(v.dtype)
+    return dq, dk, dv_out, jnp.zeros_like(window)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts with top-k routing, static capacity, and
+expert-parallelism over the TP axis ("model").
+
+Inside shard_map every (data, model) cell sees the SAME local tokens
+(activations are TP-replicated) and owns E/tp experts. Each rank:
+  1. routes all local tokens (router weights replicated -> tp_shared),
+  2. gathers the tokens assigned to ITS experts into a (E_local, C, d)
+     capacity buffer (rank-within-expert via one-hot cumsum; overflow drops),
+  3. runs the expert FFN as one batched matmul (MXU-friendly),
+  4. scatters back weighted outputs; a single psum over the TP axis combines
+     expert outputs across ranks (and doubles as the TP reduction).
+
+Capacity C = ceil(T·k/E · capacity_factor) is static. Aux losses: standard
+load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.dist import (DistConfig, axis_index, psum, region_in,
+                               region_out, tp_region_in, tp_region_out,
+                               tp_shared)
+
+Array = jax.Array
+
+
+def capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    return max(1, int(math.ceil(tokens * top_k / n_experts * cf)))
+
+
+def moe_ffn(p: dict, x: Array, cfg, dist: DistConfig,
+            fd=None) -> Tuple[Array, Array]:
+    """x: (T, d) local tokens (TP-replicated). Returns (out (T,d), aux_loss).
+
+    fd: per-leaf fsdp dims — on decode paths of FSDP archs the expert
+    weights stay sharded over the data axis (w_in/w_gate input-dim sharded
+    -> slice+psum; w_out output-dim sharded -> all_gather features)."""
+    fd = fd or {}
+    d = x.shape[-1]
+    E, K = cfg.n_experts, cfg.experts_per_token
+    tp = dist.tp
+    # local expert count: weights arrive sliced by shard_map
+    E_l = p["w_in"].shape[0]
+    r = axis_index(tp)
+
+    xi = region_in(x, dist, axis=0)   # sp: gather seq-sharded tokens
+    T = xi.shape[0]
+    logits = (xi @ tp_shared(p["router"], tp)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                 # (T,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (computed identically on all ranks) ----
+    density = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(density * mean_prob)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = lb_loss + 1e-3 * z_loss
+    if tp is not None:
+        # aux is computed replicated on every TP rank; its gradient paths
+        # (router via tp_shared, xi via the region boundary) SUM over ranks,
+        # so scale by 1/n to keep the aux gradient exact.
+        aux = aux / jax.lax.psum(1.0, tp)
+
+    # ---- dispatch to local experts ----
+    C = capacity(T, K, E, cfg.moe_capacity_factor)
+    flat_e = eidx.reshape(-1)                            # (T*K,)
+    flat_g = gate.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    local_e = flat_e - r * E_l
+    sel = (local_e >= 0) & (local_e < E_l)
+    le = jnp.clip(local_e, 0, E_l - 1)
+    onehot = jax.nn.one_hot(jnp.where(sel, le, E_l), E_l + 1, dtype=jnp.int32)
+    rank_in_e = jnp.cumsum(onehot, axis=0) - onehot      # pre-count
+    slot = jnp.take_along_axis(rank_in_e, jnp.where(sel, le, E_l)[:, None],
+                               axis=1)[:, 0]
+    keep = sel & (slot < C)
+    dest = jnp.where(keep, le * C + slot, E_l * C)       # overflow -> dump row
+
+    buf = jnp.zeros((E_l * C + 1, d), x.dtype)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], xi[flat_t], 0))
+    eb = buf[:-1].reshape(E_l, C, d)
+
+    # ---- expert FFN (batched over local experts) ----
+    from repro.models.dist import all_gather, fdot, psum as _psum
+    eb_in = eb
+    if fd.get("w_in") is not None and dist.fsdp is not None:
+        dl = p["w_in"].shape[1]
+        rf = axis_index(dist.fsdp)
+        eb_in = jax.lax.dynamic_slice_in_dim(eb, rf * dl, dl, axis=-1)
+
+    def _ein_in(w):
+        h = jnp.einsum("ecd,edf->ecf", eb_in, w)
+        if fd.get("w_in") is not None and dist.fsdp is not None:
+            h = _psum(h, dist.fsdp)
+        return h
+
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(_ein_in(p["w_gate"])) * _ein_in(p["w_in"])
+    else:
+        h = jax.nn.gelu(_ein_in(p["w_in"]))
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_out"])       # (E_l,C,d[/fsdp])
+
+    # ---- combine back ----
+    d_out = eo.shape[-1]
+    flat_out = eo.reshape(E_l * C, d_out)
+    picked = jnp.where(keep[:, None],
+                       jnp.take(flat_out, jnp.where(keep, le * C + slot, 0),
+                                axis=0), 0)
+    contrib = picked * flat_g[:, None].astype(x.dtype)
+    out = jnp.zeros((T, d_out), x.dtype).at[flat_t].add(contrib)
+    if fd.get("w_out") is not None and dist.fsdp is not None:
+        out = all_gather(out, dist.fsdp, gather_axis=out.ndim - 1, tiled=True)
+
+    if cfg.moe_shared_expert:
+        # shared expert is TP-sharded (column/row parallel); its partial sum
+        # rides the same psum as the expert combine.
+        hs = jax.nn.silu(fdot(xi, p["shared_w_gate"], fd.get("shared_w_gate"),
+                              dist)) * \
+            fdot(xi, p["shared_w_in"], fd.get("shared_w_in"), dist)
+        out = out + fdot(hs, p["shared_w_out"], fd.get("shared_w_out"), dist)
+    out = region_out(out, dist, axis=0)
+    return out, aux

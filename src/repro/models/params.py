@@ -1,0 +1,126 @@
+"""Parameter trees with sharding metadata.
+
+Every architecture declares its parameters through ParamBuilder, attaching
+per-leaf logical axes:
+
+  "tp"   -> tensor/expert-parallel mesh axis (dist.tp, usually "model")
+  "fsdp" -> parameter-sharding mesh axis (dist.fsdp, "data", big archs only)
+  None   -> replicated
+
+From one declaration we derive: global ShapeDtypeStructs (dry-run),
+PartitionSpecs (shard_map in_specs / jit shardings), init functions (smoke
+tests), the stacked-layer mask (compression granularity), and the
+tp_grad_sync mask (TP-replicated params with per-rank partial grads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.models.dist import DistConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafMeta:
+    axes: Tuple[Optional[str], ...]   # logical axis per GLOBAL dim
+    stacked: bool = False             # leading dim is a lax.scan layer stack
+    tp_grad_sync: bool = False        # needs grad psum over dist.tp
+    init: str = "normal"              # normal | zeros | ones
+    fan_in_dim: Optional[int] = None  # dim index used for 1/sqrt(fan_in) scale
+    scale: float = 1.0
+
+    def fsdp_dim(self) -> Optional[int]:
+        return self.axes.index("fsdp") if "fsdp" in self.axes else None
+
+    def pspec(self, dist: DistConfig) -> PartitionSpec:
+        names = []
+        for a in self.axes:
+            if a == "tp":
+                names.append(dist.tp)
+            elif a == "fsdp":
+                names.append(dist.fsdp)
+            else:
+                names.append(None)
+        return PartitionSpec(*names)
+
+
+def _nested_set(d: Dict, path: str, value: Any):
+    keys = path.split("/")
+    for k in keys[:-1]:
+        d = d.setdefault(k, {})
+    d[keys[-1]] = value
+
+
+class ParamBuilder:
+    def __init__(self, dtype: str = "bfloat16"):
+        self.dtype = jnp.dtype(dtype)
+        self._shapes: Dict[str, Tuple[int, ...]] = {}
+        self._meta: Dict[str, LeafMeta] = {}
+
+    def add(self, path: str, shape: Tuple[int, ...],
+            axes: Tuple[Optional[str], ...], *, stacked: bool = False,
+            tp_grad_sync: bool = False, init: str = "normal",
+            fan_in_dim: Optional[int] = None, scale: float = 1.0):
+        assert len(axes) == len(shape), (path, shape, axes)
+        self._shapes[path] = tuple(int(s) for s in shape)
+        self._meta[path] = LeafMeta(tuple(axes), stacked, tp_grad_sync, init,
+                                    fan_in_dim, scale)
+        return self
+
+    # ------------------------------------------------------------------
+    def shapes(self):
+        out: Dict = {}
+        for p, s in self._shapes.items():
+            _nested_set(out, p, jax.ShapeDtypeStruct(s, self.dtype))
+        return out
+
+    def meta(self):
+        out: Dict = {}
+        for p, m in self._meta.items():
+            _nested_set(out, p, m)
+        return out
+
+    def pspecs(self, dist: DistConfig):
+        out: Dict = {}
+        for p, m in self._meta.items():
+            _nested_set(out, p, m.pspec(dist))
+        return out
+
+    def stacked_mask(self):
+        out: Dict = {}
+        for p, m in self._meta.items():
+            _nested_set(out, p, m.stacked)
+        return out
+
+    def tp_sync_mask(self):
+        out: Dict = {}
+        for p, m in self._meta.items():
+            _nested_set(out, p, m.tp_grad_sync)
+        return out
+
+    def init(self, key: Array):
+        """Materialize GLOBAL parameters (single-host smoke tests / examples)."""
+        out: Dict = {}
+        for i, (p, shape) in enumerate(self._shapes.items()):
+            m = self._meta[p]
+            k = jax.random.fold_in(key, i)
+            if m.init == "zeros":
+                val = jnp.zeros(shape, self.dtype)
+            elif m.init == "ones":
+                val = jnp.ones(shape, self.dtype)
+            else:
+                fan_dim = m.fan_in_dim
+                if fan_dim is None:
+                    fan_dim = len(shape) - 2 if len(shape) >= 2 else 0
+                fan_in = shape[fan_dim]
+                std = m.scale / math.sqrt(max(1, fan_in))
+                val = (std * jax.random.normal(k, shape)).astype(self.dtype)
+            _nested_set(out, p, val)
+        return out

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (OptConfig, init_opt_state, apply_updates,
+                                    sgd, momentum, adam)
+from repro.optim.schedules import piecewise_linear, constant, cosine

@@ -1,0 +1,109 @@
+"""Pure-JAX pytree optimizers (SGD / momentum+Nesterov / Adam).
+
+The paper trains with SGD; Figure 7c adds Nesterov momentum (outside its
+theory) — we implement both to reproduce that ablation. States live as
+pytrees shaped like the params, so they inherit the parameter sharding
+(FSDP-sharded params ⇒ ZeRO-style sharded optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "sgd"          # sgd | momentum | adam
+    lr: float = 0.1            # base lr; schedules multiply it
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    nesterov: bool = False
+    grad_clip: float = 0.0     # 0 = off; global-norm clip
+
+
+def init_opt_state(cfg: OptConfig, params):
+    if cfg.name == "sgd":
+        return {}
+    if cfg.name == "momentum":
+        return {"m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    if cfg.name == "adam":
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def _clip(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def sgd(cfg: OptConfig, params, grads, state, lr: Array):
+    grads = _clip(grads, cfg.grad_clip)
+
+    def upd(p, g):
+        g32 = g.astype(jnp.float32)
+        if cfg.weight_decay:
+            g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * g32).astype(p.dtype)
+    return jax.tree_util.tree_map(upd, params, grads), state
+
+
+def momentum(cfg: OptConfig, params, grads, state, lr: Array):
+    grads = _clip(grads, cfg.grad_clip)
+
+    def upd(p, g, m):
+        g32 = g.astype(jnp.float32)
+        if cfg.weight_decay:
+            g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+        m_new = cfg.beta1 * m + g32
+        step = (g32 + cfg.beta1 * m_new) if cfg.nesterov else m_new
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state["m"])
+    new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m}
+
+
+def adam(cfg: OptConfig, params, grads, state, lr: Array):
+    grads = _clip(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    b1c = 1 - cfg.beta1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        if cfg.weight_decay:
+            g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+        m_new = cfg.beta1 * m + (1 - cfg.beta1) * g32
+        v_new = cfg.beta2 * v + (1 - cfg.beta2) * g32 * g32
+        step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                m_new, v_new)
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "count": count}
+
+
+def apply_updates(cfg: OptConfig, params, grads, state, lr: Array):
+    """Dispatch on cfg.name. lr is the scheduled learning rate (traced)."""
+    fn = {"sgd": sgd, "momentum": momentum, "adam": adam}[cfg.name]
+    return fn(cfg, params, grads, state, lr)

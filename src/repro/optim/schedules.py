@@ -1,0 +1,31 @@
+"""Learning-rate schedules. `piecewise_linear` reproduces the paper's
+setup: 0.0 -> peak over the first warmup fraction, then linearly to 0."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def piecewise_linear(peak: float, total_steps: int, warmup_steps: int):
+    """The paper's schedule: linear 0->peak over warmup, then peak->0."""
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        up = peak * s / max(1, warmup_steps)
+        down = peak * (total_steps - s) / max(1, total_steps - warmup_steps)
+        return jnp.clip(jnp.minimum(up, down), 0.0, peak)
+    return fn
+
+
+def cosine(peak: float, total_steps: int, warmup_steps: int = 0,
+           floor: float = 0.0):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * s / max(1, warmup_steps) if warmup_steps else peak
+        t = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                     0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos) if warmup_steps else cos
+    return fn

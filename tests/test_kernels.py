@@ -1,0 +1,81 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracles (assert_allclose)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.qsgd import BLOCK_C, BLOCK_R, qsgd_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.terngrad import terngrad_pallas
+from repro.kernels.topk_mask import topk_mask_pallas
+
+KEY = jax.random.key(7)
+
+SHAPES = [(37,), (512,), (4096,), (3, 700), (8, 8, 33)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("levels", [4, 64])
+def test_qsgd_kernel_matches_ref(shape, dtype, levels):
+    x = (10 * jax.random.normal(KEY, shape)).astype(dtype)
+    a = ops.qsgd_compress(x, KEY, levels, use_pallas=True)
+    b = ops.qsgd_compress(x, KEY, levels, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_terngrad_kernel_matches_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape).astype(dtype)
+    a = ops.terngrad_compress(x, KEY, use_pallas=True)
+    b = ops.terngrad_compress(x, KEY, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("k", [1, 16, 128])
+def test_topk_kernel_matches_ref(shape, k):
+    x = jax.random.normal(KEY, shape)
+    a = ops.blockwise_topk(x, k, use_pallas=True)
+    b = ops.blockwise_topk(x, k, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+
+
+def test_topk_keeps_approximately_k():
+    x = jax.random.normal(KEY, (BLOCK_R, BLOCK_C))
+    for k in (8, 32, 100):
+        y = topk_mask_pallas(x, k, interpret=True)
+        nnz = np.asarray((y != 0).sum(axis=-1))
+        assert (nnz >= k).all() and (nnz <= k + 4).all(), (k, nnz)
+
+
+@pytest.mark.parametrize("rows", [64, 128])
+@pytest.mark.parametrize("d", [128, 384])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rmsnorm_kernel_matches_ref(rows, d, dtype):
+    x = jax.random.normal(KEY, (rows, d)).astype(dtype)
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), (d,)).astype(dtype)
+    a = rmsnorm_pallas(x, g, interpret=True)
+    b = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_qsgd_kernel_direct_tiles():
+    """Direct pallas_call on pre-tiled input (no wrapper padding)."""
+    x = jax.random.normal(KEY, (BLOCK_R * 2, BLOCK_C))
+    u = jax.random.uniform(jax.random.fold_in(KEY, 2), x.shape)
+    nrm = jnp.linalg.norm(x)
+    a = qsgd_pallas(x, u, nrm, 16, interpret=True)
+    b = ref.qsgd_ref(x, u, nrm, 16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    c = terngrad_pallas(x, u, jnp.max(jnp.abs(x)), interpret=True)
+    d = ref.terngrad_ref(x, u, jnp.max(jnp.abs(x)))
+    np.testing.assert_allclose(np.asarray(c), np.asarray(d), atol=1e-6)
