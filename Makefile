@@ -1,0 +1,18 @@
+# Repro of "On the Discrepancy between the Theoretical Analysis and
+# Practical Implementations of Compressed Communication for Distributed
+# Deep Learning" (AAAI'20). See README.md / ROADMAP.md.
+
+# Tier-1 verification — the exact command from ROADMAP.md.
+verify:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+# Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan).
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -m benchmarks.run --only micro
+
+# Just the per-leaf-vs-planned dispatch benchmark -> BENCH_unitplan.json.
+bench-unitplan:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
+	  "from benchmarks.microbench import unitplan; unitplan()"
+
+.PHONY: verify bench bench-unitplan

@@ -1,19 +1,24 @@
 """Compression-operator microbenchmarks: us per invocation on a 1M-element
-gradient, per operator x granularity, plus the Pallas-kernel wrappers."""
+gradient, per operator x granularity, plus the Pallas-kernel wrappers and
+the per-leaf-vs-UnitPlan dispatch benchmark (BENCH_unitplan.json)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line
-from repro.core import Granularity, apply_unitwise, make_compressor, \
-    stacked_mask
+from repro.core import (Granularity, apply_unitwise, build_plan,
+                        make_compressor, stacked_mask)
+from repro.core.granularity import apply_unitwise_reference
 from repro.kernels import ops
 
 D = 1 << 20
 KEY = jax.random.key(0)
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _time(fn, *args, iters=5):
@@ -57,6 +62,87 @@ def kernels():
         csv_line(name, us, "interpret=True(CPU)")
 
 
+# --------------------------------------------------------------------------
+# per-leaf vs UnitPlan dispatch benchmark
+# --------------------------------------------------------------------------
+
+def _grad_trees():
+    """(name, grads pytree, stacked mask) for the two reference configs."""
+    from repro.configs.registry import get_smoke
+    from repro.configs.resnet9_cifar import RESNET9
+    from repro.models import DistConfig, Model
+    from repro.models.cnn import init_cnn
+
+    cnn = init_cnn(RESNET9, KEY)
+    yield "resnet9", cnn, stacked_mask(cnn)
+
+    m = Model(get_smoke("phi4-mini-3.8b"), DistConfig())
+    params = m.init(jax.random.fold_in(KEY, 1))
+    yield "phi4-mini", params, m.stacked()
+
+
+def _traced_compressor_calls(apply, comp, gran, tree, sm) -> int:
+    """How many times the compressor body is traced in ONE jit trace —
+    the operator-launch count the paper's granularity discussion (and
+    Agarwal et al.) care about."""
+    count = 0
+
+    def counting(x, k):
+        nonlocal count
+        count += 1
+        return comp.sim(x, k)
+
+    jax.make_jaxpr(lambda t: apply(counting, gran, t, sm, KEY))(tree)
+    return count
+
+
+def unitplan(out_path: str = None):
+    """Units compressed per traced call + wall clock: legacy per-leaf loop
+    vs the UnitPlan bucketed path, on the resnet9 and phi4-mini gradient
+    pytrees (layerwise granularity — the ragged case). Emits
+    BENCH_unitplan.json next to the repo root for CI tracking."""
+    gran = Granularity("layerwise")
+    comp = make_compressor("qsgd", levels=16)
+    report = {}
+    for name, tree, sm in _grad_trees():
+        plan = build_plan(tree, sm, gran)
+        legacy_calls = _traced_compressor_calls(
+            apply_unitwise_reference, comp, gran, tree, sm)
+        plan_calls = _traced_compressor_calls(
+            apply_unitwise, comp, gran, tree, sm)
+
+        fn = lambda x, k: comp.sim(x, k)  # noqa: E731
+        legacy_jit = jax.jit(
+            lambda t, k: apply_unitwise_reference(fn, gran, t, sm, k))
+        plan_jit = jax.jit(
+            lambda t, k: apply_unitwise(fn, gran, t, sm, k))
+        legacy_us = _time(legacy_jit, tree, KEY, iters=20)
+        plan_us = _time(plan_jit, tree, KEY, iters=20)
+
+        report[name] = {
+            "num_leaves": len(jax.tree_util.tree_leaves(tree)),
+            "num_units": plan.num_units,
+            "num_size_classes": plan.num_dispatches,
+            "legacy_traced_calls": legacy_calls,
+            "plan_traced_calls": plan_calls,
+            "legacy_us": round(legacy_us, 1),
+            "plan_us": round(plan_us, 1),
+            "speedup": round(legacy_us / max(plan_us, 1e-9), 2),
+        }
+        csv_line(f"unitplan_{name}_legacy", legacy_us,
+                 f"traced_calls={legacy_calls}")
+        csv_line(f"unitplan_{name}_planned", plan_us,
+                 f"traced_calls={plan_calls}")
+        # the acceptance property: O(#size-classes) dispatches, not O(#leaves)
+        assert plan_calls == plan.num_dispatches <= legacy_calls, report[name]
+
+    path = out_path or os.path.join(_REPO_ROOT, "BENCH_unitplan.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
 def run():
     operators()
     kernels()
+    unitplan()

@@ -6,7 +6,10 @@ from repro.core.compressors import (Compressor, Identity, RandomK, TopK,
                                     make_compressor, available_compressors)
 from repro.core.granularity import (Granularity, stacked_mask, unit_dims,
                                     num_units, apply_unitwise,
-                                    apply_unitwise_with_state)
+                                    apply_unitwise_with_state,
+                                    apply_unitwise_reference,
+                                    apply_unitwise_with_state_reference)
+from repro.core.plan import UnitPlan, Bucket, build_plan, plan_unit_dims
 from repro.core.aggregation import (CompressionConfig, compressed_allreduce,
                                     aggregate_simulated_workers,
                                     no_compression, STRATEGIES)

@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import Compressor, Identity, RandomK, make_compressor
-from repro.core.granularity import (Granularity, apply_unitwise,
-                                    apply_unitwise_with_state)
+from repro.core.granularity import Granularity
+from repro.core.plan import UnitPlan, build_plan
 
 Array = jax.Array
 
@@ -182,11 +182,15 @@ def _unit_shared_random(cfg: CompressionConfig, axis_names):
 def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                          axis_names: Sequence[str], key: Array,
                          n_workers: int,
-                         ef_state=None):
+                         ef_state=None,
+                         plan: Optional[UnitPlan] = None):
     """Aggregate data-parallel gradients with bidirectional compression.
 
     Must be called inside shard_map. Returns (grads_hat, new_ef_state).
-    `n_workers` is the static product of the DP axis sizes.
+    `n_workers` is the static product of the DP axis sizes. Pass `plan`
+    (a UnitPlan built once at trace time, e.g. by the engine) to skip
+    re-deriving the unit partition; otherwise the cached plan for
+    (grads structure, granularity) is fetched.
     """
     axis_names = tuple(axis_names)
     if cfg.strategy == "dense":
@@ -195,14 +199,19 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
             grads)
         return agg, ef_state
 
+    if not jax.tree_util.tree_leaves(grads):  # nothing to aggregate
+        return grads, ef_state
+
+    if plan is None:
+        plan = build_plan(grads, stacked, cfg.granularity)
+
     if cfg.error_feedback:
         if ef_state is None:
             raise ValueError("error_feedback=True requires ef_state")
         fn = (_unit_simulated_ef(cfg, axis_names)
               if cfg.strategy == "simulated"
               else _unit_allgather_ef(cfg, axis_names))
-        return apply_unitwise_with_state(fn, cfg.granularity, grads, ef_state,
-                                         stacked, key)
+        return plan.execute_with_state(fn, grads, ef_state, key)
 
     if cfg.strategy == "simulated":
         fn = _unit_simulated(cfg, axis_names)
@@ -214,25 +223,33 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         fn = _unit_shared_random(cfg, axis_names)
     else:  # pragma: no cover
         raise ValueError(cfg.strategy)
-    return apply_unitwise(fn, cfg.granularity, grads, stacked, key), ef_state
+    return plan.execute(fn, grads, key), ef_state
 
 
 def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
-                                key: Array, ef_state=None):
+                                key: Array, ef_state=None,
+                                plan: Optional[UnitPlan] = None):
     """Single-device realization of Algorithm 1 for the paper-repro
     experiments: `worker_grads` leaves carry a leading worker axis n.
 
     Mathematically identical to compressed_allreduce(strategy='simulated')
-    on an n-way mesh; runs on one CPU device.
+    on an n-way mesh; runs on one CPU device. One UnitPlan (built from the
+    per-worker tree, i.e. without the worker axis) serves both the worker
+    and master compression passes.
     """
     n = jax.tree_util.tree_leaves(worker_grads)[0].shape[0]
+    if plan is None:
+        per_worker_tree = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            worker_grads)
+        plan = build_plan(per_worker_tree, stacked, cfg.granularity)
 
     def per_worker(g_i, i):
         wkey = jax.random.fold_in(key, i)
 
         def fn(x, ukey):
             return cfg.qw.sim(x, ukey)
-        return apply_unitwise(fn, cfg.granularity, g_i, stacked, wkey)
+        return plan.execute(fn, g_i, wkey)
 
     if cfg.error_feedback:
         if ef_state is None:
@@ -243,8 +260,8 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
                 e = x + m
                 q = cfg.qw.sim(e, ukey)
                 return q, e - q
-            return apply_unitwise_with_state(fn, cfg.granularity, g_i, m_i,
-                                             stacked, jax.random.fold_in(key, i))
+            return plan.execute_with_state(fn, g_i, m_i,
+                                           jax.random.fold_in(key, i))
         compressed, new_ef = jax.vmap(per_worker_ef, in_axes=(0, 0, 0))(
             worker_grads, ef_state, jnp.arange(n))
     else:
@@ -256,5 +273,5 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
 
     def master_fn(x, ukey):
         return cfg.qm.sim(x, _master_key(ukey))
-    out = apply_unitwise(master_fn, cfg.granularity, mean, stacked, key)
+    out = plan.execute(master_fn, mean, key)
     return out, new_ef

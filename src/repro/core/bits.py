@@ -7,10 +7,11 @@ roofline cross-checks them against the collective bytes parsed from HLO.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Sequence, Union
 
 from repro.core.aggregation import CompressionConfig
 from repro.core.compressors import Compressor
+from repro.core.plan import UnitPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,12 +31,18 @@ def _wire_bits(cfg: CompressionConfig) -> int:
     return 16 if cfg.wire_dtype == "bfloat16" else 32
 
 
-def comm_report(cfg: CompressionConfig, unit_dims: List[int],
+def comm_report(cfg: CompressionConfig,
+                unit_dims: Union[UnitPlan, Sequence[int]],
                 n_workers: int) -> CommReport:
     """Wire cost of one aggregation step.
 
-    Ring-allreduce reference: each worker sends+receives ~2·d elements.
+    `unit_dims` is either the static per-unit dimension list or a UnitPlan
+    (whose accounting dims are used — the canonical source once the engine
+    has built its plan). Ring-allreduce reference: each worker
+    sends+receives ~2·d elements.
     """
+    if isinstance(unit_dims, UnitPlan):
+        unit_dims = list(unit_dims.unit_dims)
     d_total = sum(unit_dims)
     dense_bits = 2 * 32 * d_total
 

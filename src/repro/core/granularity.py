@@ -16,6 +16,13 @@ unit the compressor sees:
 and reassembles the gradient pytree. fn may contain collectives (they batch
 under vmap), which is how aggregation.py builds compressed all-reduce out of
 this module.
+
+Execution goes through core.plan.UnitPlan: a static bucketed plan computed
+once at trace time, executing one batched compressor dispatch per unit size
+class instead of one traced call per leaf. The original per-leaf loops are
+kept as `apply_unitwise_reference` / `apply_unitwise_with_state_reference`
+— the numerical oracle the plan path is property-tested against
+(tests/test_plan.py).
 """
 from __future__ import annotations
 
@@ -86,11 +93,23 @@ def _fold_unit(key: Array, uid: int) -> Array:
     return jax.random.fold_in(key, uid)
 
 
-def apply_unitwise(fn, gran: Granularity, grads, stacked, key: Array):
+def apply_unitwise(fn, gran: Granularity, grads, stacked, key: Array,
+                   plan=None):
     """Map fn(x_flat: f32[d], key) -> f32[d] over every compression unit.
 
-    Returns a pytree with the structure/dtypes of `grads`.
+    Returns a pytree with the structure/dtypes of `grads`. Executes via a
+    (cached) UnitPlan: O(#size-classes) batched dispatches, not O(#leaves).
+    Pass `plan` to reuse a plan built once at trace time.
     """
+    from repro.core.plan import build_plan
+    if plan is None:
+        plan = build_plan(grads, stacked, gran)
+    return plan.execute(fn, grads, key)
+
+
+def apply_unitwise_reference(fn, gran: Granularity, grads, stacked,
+                             key: Array):
+    """Legacy per-leaf execution path (the plan's numerical oracle)."""
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     marks = jax.tree_util.tree_leaves(stacked)
 
@@ -139,9 +158,18 @@ def apply_unitwise(fn, gran: Granularity, grads, stacked, key: Array):
 
 
 def apply_unitwise_with_state(fn, gran: Granularity, grads, state, stacked,
-                              key: Array):
+                              key: Array, plan=None):
     """Like apply_unitwise, but fn(x, m, key) -> (y, m_new) threads a
     same-shaped per-unit state (error-feedback memory)."""
+    from repro.core.plan import build_plan
+    if plan is None:
+        plan = build_plan(grads, stacked, gran)
+    return plan.execute_with_state(fn, grads, state, key)
+
+
+def apply_unitwise_with_state_reference(fn, gran: Granularity, grads, state,
+                                        stacked, key: Array):
+    """Legacy per-leaf stateful path (the plan's numerical oracle)."""
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     sleaves = jax.tree_util.tree_leaves(state)
     marks = jax.tree_util.tree_leaves(stacked)

@@ -7,7 +7,7 @@ layer-wise bound is tighter, which is the paper's Theorem-level claim.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +77,27 @@ def layerwise_tighter(omegas_w, omegas_m, dims) -> bool:
     """The paper's headline theoretical claim (§4, last paragraph)."""
     return trace_A(omegas_w, omegas_m, dims) <= entire_model_bound(
         omegas_w, omegas_m, dims) + 1e-9
+
+
+def noise_bounds_from_plan(plan, comp_w: Compressor,
+                           comp_m: Optional[Compressor] = None
+                           ) -> Tuple[float, float]:
+    """(Trace(A), entire-model bound) for a UnitPlan's unit partition,
+    using the operators' closed-form Ω per unit dimension.
+
+    The plan's accounting dims are the d_j of the paper's §4; this is the
+    wire-level counterpart of comm_report reading plan.unit_dims. Raises
+    if an operator has no closed-form Ω (use empirical_omega instead).
+    """
+    dims = list(plan.unit_dims)
+    ow = [comp_w.omega(d) for d in dims]
+    om = ([comp_m.omega(d) for d in dims] if comp_m is not None
+          else [0.0] * len(dims))
+    if any(o is None for o in ow + om):
+        raise ValueError(
+            "operator has no closed-form Omega; measure empirical_omega "
+            "per unit instead")
+    return (trace_A(ow, om, dims), entire_model_bound(ow, om, dims))
 
 
 def lemma1_check(comp: Compressor, parts: List[Array], key: Array,

@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.qsgd import BLOCK_C, BLOCK_R, qsgd_pallas
+from repro.kernels.qsgd import (BLOCK_C, BLOCK_R, qsgd_pallas,
+                                qsgd_pallas_rows)
 from repro.kernels.rmsnorm import rmsnorm_pallas
-from repro.kernels.terngrad import terngrad_pallas
+from repro.kernels.terngrad import terngrad_pallas, terngrad_pallas_rows
 from repro.kernels.topk_mask import topk_mask_pallas
 
 Array = jax.Array
@@ -84,6 +85,113 @@ def blockwise_topk(x: Array, k_per_block: int,
     else:
         out = ref.topk_mask_ref(xt, k_per_block)
     return _untile(out, d, x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# UnitPlan bucket entry points: a bucket matrix (n_units, d) compresses in
+# ONE kernel dispatch. Each unit's statistic (l2 norm / max) is computed per
+# row, tiled into the kernels' (R, 512) layout alongside the data, and the
+# per-row-scale kernel variants consume it — the batched counterpart of the
+# scalar-statistic wrappers above.
+# --------------------------------------------------------------------------
+
+def _tile_units(x2d: Array):
+    """(n, d) bucket -> ((R, 512) tiles, live_rows, tile_rows_per_unit)."""
+    n, d = x2d.shape
+    rpu = -(-d // BLOCK_C)
+    xp = jnp.pad(x2d, ((0, 0), (0, rpu * BLOCK_C - d)))
+    rows = n * rpu
+    R = -(-rows // BLOCK_R) * BLOCK_R
+    xt = jnp.pad(xp.reshape(rows, BLOCK_C), ((0, R - rows), (0, 0)))
+    return xt, rows, rpu
+
+
+def _unit_noise(keys: Array, n: int, rpu: int, R: int) -> Array:
+    """Per-unit uniforms over the padded tile span, one key per unit."""
+    noise = jax.vmap(
+        lambda k: jax.random.uniform(k, (rpu * BLOCK_C,)))(keys)
+    return jnp.pad(noise.reshape(n * rpu, BLOCK_C), ((0, R - n * rpu),
+                                                     (0, 0)))
+
+
+def _row_scales(stat: Array, rpu: int, R: int) -> Array:
+    """(n,) per-unit statistic -> (R, 1) per-tile-row scale column."""
+    rows = stat.shape[0] * rpu
+    s = jnp.repeat(stat, rpu)
+    return jnp.pad(s, (0, R - rows), constant_values=1.0)[:, None]
+
+
+@partial(jax.jit, static_argnames=("levels", "use_pallas"))
+def qsgd_compress_units(x2d: Array, keys: Array, levels: int = 16,
+                        use_pallas: bool = True) -> Array:
+    """Fused QSGD over a whole bucket: rows of `x2d` are compression units
+    (each with its own l2 norm), `keys` one PRNG key per unit. One Pallas
+    dispatch regardless of the number of units."""
+    xf = x2d.astype(jnp.float32)
+    n, d = xf.shape
+    norms = jnp.linalg.norm(xf, axis=1)
+    xt, rows, rpu = _tile_units(xf)
+    R = xt.shape[0]
+    noise = _unit_noise(keys, n, rpu, R)
+    scales = _row_scales(norms, rpu, R)
+    if use_pallas:
+        out = qsgd_pallas_rows(xt, noise, scales, levels,
+                               interpret=_interpret())
+    else:
+        out = ref.qsgd_ref(xt, noise, scales, levels)  # (R,1) broadcasts
+    return out[:rows].reshape(n, rpu * BLOCK_C)[:, :d].astype(x2d.dtype)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def terngrad_compress_units(x2d: Array, keys: Array,
+                            use_pallas: bool = True) -> Array:
+    """Fused TernGrad over a whole bucket (per-row max scale)."""
+    xf = x2d.astype(jnp.float32)
+    n, d = xf.shape
+    scales_u = jnp.max(jnp.abs(xf), axis=1)
+    xt, rows, rpu = _tile_units(xf)
+    R = xt.shape[0]
+    noise = _unit_noise(keys, n, rpu, R)
+    scales = _row_scales(scales_u, rpu, R)
+    if use_pallas:
+        out = terngrad_pallas_rows(xt, noise, scales,
+                                   interpret=_interpret())
+    else:
+        out = ref.terngrad_ref(xt, noise, scales)
+    return out[:rows].reshape(n, rpu * BLOCK_C)[:, :d].astype(x2d.dtype)
+
+
+_UNIT_KERNELS = {
+    "qsgd": lambda x, k, kw: qsgd_compress_units(
+        x, k, kw.get("levels", 16), kw.get("use_pallas", True)),
+    "terngrad": lambda x, k, kw: terngrad_compress_units(
+        x, k, kw.get("use_pallas", True)),
+}
+
+
+def plan_compress(plan, grads, key: Array, kind: str = "qsgd", **kw):
+    """Compress a gradient pytree through the Pallas kernels, driven by a
+    core.plan.UnitPlan: gather each bucket, ONE fused kernel dispatch per
+    bucket, scatter back.
+
+    The per-unit PRNG KEYS come from the plan's fold tables (same keys as
+    the jnp execution path), but the uniform draws differ: the kernel
+    wrappers draw noise over the padded (rows, 512) tile span, while
+    Compressor.sim draws exactly d uniforms — so outputs are the same
+    operator family with the same per-unit statistics, NOT bit-identical
+    to plan.execute(comp.sim, ...)."""
+    if kind not in _UNIT_KERNELS:
+        raise ValueError(f"no bucket kernel for {kind!r}; "
+                         f"have {sorted(_UNIT_KERNELS)}")
+    run = _UNIT_KERNELS[kind]
+    flat = plan.flatten(grads)
+    keys = plan.unit_keys(key)
+    out = jnp.zeros((plan.exec_total,), jnp.float32)
+    for b in plan.buckets:
+        x = plan.gather_bucket(flat, b)
+        kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
+        out = plan.scatter_bucket(out, b, run(x, kb, kw))
+    return plan.unflatten(out)
 
 
 @partial(jax.jit, static_argnames=("eps", "use_pallas"))

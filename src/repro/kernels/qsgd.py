@@ -31,6 +31,41 @@ def _qsgd_kernel(x_ref, u_ref, norm_ref, o_ref, *, levels: int):
     o_ref[...] = jnp.sign(x) * lev * (n / levels)
 
 
+def _qsgd_rows_kernel(x_ref, u_ref, norm_ref, o_ref, *, levels: int):
+    x = x_ref[...]
+    u = u_ref[...]
+    n = jnp.maximum(norm_ref[...], _EPS)       # (BLOCK_R, 1): per-row scale
+    y = jnp.abs(x) / n * levels
+    lev = jnp.floor(y + u)
+    o_ref[...] = jnp.sign(x) * lev * (n / levels)
+
+
+def qsgd_pallas_rows(x: jax.Array, noise: jax.Array, norms: jax.Array,
+                     levels: int, *, interpret: bool = True) -> jax.Array:
+    """Per-ROW-scale QSGD: one fused dispatch for a whole UnitPlan bucket.
+
+    x, noise: (R, C) f32 with R % BLOCK_R == 0, C == BLOCK_C; norms:
+    (R, 1) f32 — the l2 norm of the compression unit each tile row belongs
+    to (a unit spanning k tile rows repeats its norm k times). This is the
+    batched form of qsgd_pallas: same arithmetic, unit statistics resolved
+    per row instead of one scalar per launch."""
+    R, C = x.shape
+    assert R % BLOCK_R == 0 and C == BLOCK_C, (R, C)
+    assert norms.shape == (R, 1), norms.shape
+    return pl.pallas_call(
+        functools.partial(_qsgd_rows_kernel, levels=levels),
+        grid=(R // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, noise, norms)
+
+
 def qsgd_pallas(x: jax.Array, noise: jax.Array, norm: jax.Array,
                 levels: int, *, interpret: bool = True) -> jax.Array:
     """x, noise: (R, C) f32 with R % BLOCK_R == 0, C == BLOCK_C.

@@ -23,6 +23,35 @@ def _terngrad_kernel(x_ref, u_ref, scale_ref, o_ref):
     o_ref[...] = jnp.sign(x) * b * s
 
 
+def _terngrad_rows_kernel(x_ref, u_ref, scale_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    s = jnp.maximum(scale_ref[...], _EPS)      # (BLOCK_R, 1): per-row scale
+    b = (u < jnp.abs(x) / s).astype(x.dtype)
+    o_ref[...] = jnp.sign(x) * b * s
+
+
+def terngrad_pallas_rows(x: jax.Array, noise: jax.Array, scales: jax.Array,
+                         *, interpret: bool = True) -> jax.Array:
+    """Per-ROW-scale TernGrad: one fused dispatch for a whole UnitPlan
+    bucket. scales: (R, 1) — max|x| of the unit each tile row belongs to."""
+    R, C = x.shape
+    assert R % BLOCK_R == 0 and C == BLOCK_C, (R, C)
+    assert scales.shape == (R, 1), scales.shape
+    return pl.pallas_call(
+        _terngrad_rows_kernel,
+        grid=(R // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, noise, scales)
+
+
 def terngrad_pallas(x: jax.Array, noise: jax.Array, scale: jax.Array,
                     *, interpret: bool = True) -> jax.Array:
     R, C = x.shape

@@ -33,7 +33,8 @@ except ImportError:  # older jax
                           out_specs=out_specs, check_rep=False)
 
 from repro.core.aggregation import CompressionConfig, compressed_allreduce
-from repro.core.granularity import Granularity, apply_unitwise
+from repro.core.granularity import Granularity
+from repro.core.plan import UnitPlan, build_plan
 from repro.models.config import InputShape, ModelConfig
 from repro.models.dist import DistConfig
 from repro.models.model import Model
@@ -167,8 +168,53 @@ class Engine:
     # ------------------------------------------------------------------
     # train step
     # ------------------------------------------------------------------
+    def _local_sds(self, sds, pspec):
+        """Per-device shard ShapeDtypeStruct for one leaf (the shapes the
+        train step sees INSIDE shard_map)."""
+        shape = list(sds.shape)
+        if pspec is not None:
+            for i, ax in enumerate(pspec):
+                if ax is None or i >= len(shape):
+                    continue
+                names = ax if isinstance(ax, tuple) else (ax,)
+                f = 1
+                for nm in names:
+                    f *= self.sizes.get(nm, 1)
+                shape[i] //= f
+        return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
+
+    def comm_plans(self):
+        """(rest_plan, fsdp_plan): the static UnitPlans the train step
+        executes compression through.
+
+        Built from per-device SHARD ShapeDtypeStructs (param shapes with
+        the tp/fsdp partition applied) — the same shapes _aggregate_grads
+        traces inside shard_map — and cached on (structure, shapes,
+        granularity), so the first train-step trace and any pre-trace
+        caller (train.py summary, bits.comm_report) share one plan
+        object. fsdp_plan is None when no leaf is fsdp-aggregated or the
+        master compressor is identity (no Q_M pass runs on those leaves).
+        """
+        comp = self.comp or CompressionConfig(strategy="dense")
+        stacked = self.model.stacked()
+        fsdp_mask = self.model.fsdp_mask()
+        shapes = jax.tree_util.tree_map(self._local_sds,
+                                        self.model.param_shapes(),
+                                        self.model.param_pspecs())
+        g_fsdp, g_rest = _partition(shapes, fsdp_mask)
+        s_fsdp, s_rest = _partition(stacked, fsdp_mask)
+        rest_plan = (build_plan(g_rest, s_rest, comp.granularity)
+                     if jax.tree_util.tree_leaves(g_rest) else None)
+        master_runs = (comp.qm is not None and comp.qm.name != "identity")
+        fsdp_plan = (build_plan(g_fsdp, s_fsdp, comp.granularity)
+                     if master_runs and jax.tree_util.tree_leaves(g_fsdp)
+                     else None)
+        return rest_plan, fsdp_plan
+
     def _aggregate_grads(self, grads, key):
-        """Paper's Algorithm 1 over the DP axes."""
+        """Paper's Algorithm 1 over the DP axes, executed through the
+        static UnitPlans (one batched compressor dispatch per unit size
+        class — built once at jit-trace time, cached thereafter)."""
         model, dist, comp = self.model, self.dist, self.comp
         stacked = model.stacked()
         fsdp_mask = model.fsdp_mask()
@@ -182,9 +228,11 @@ class Engine:
                 dist.dp, key, self.dp_size)
             return _merge(g_fsdp, agg_rest)
 
+        rest_plan = build_plan(g_rest, s_rest, comp.granularity)
         # rest leaves: full bidirectional pipeline
         agg_rest, _ = compressed_allreduce(g_rest, s_rest, comp, dist.dp,
-                                           key, self.dp_size)
+                                           key, self.dp_size,
+                                           plan=rest_plan)
         # fsdp leaves: Q_W already applied in the backward hook; grads are
         # scattered+averaged. Apply Q_M layer-wise (identical key on every
         # device -> consistent master compression).
@@ -193,9 +241,8 @@ class Engine:
 
             def master(x, ukey):
                 return comp.qm.sim(x, ukey)
-            g_fsdp = jax.tree_util.tree_map(lambda x: x, g_fsdp)
-            g_fsdp = apply_unitwise(master, comp.granularity, g_fsdp, s_fsdp,
-                                    mkey)
+            fsdp_plan = build_plan(g_fsdp, s_fsdp, comp.granularity)
+            g_fsdp = fsdp_plan.execute(master, g_fsdp, mkey)
         return _merge(g_fsdp, agg_rest)
 
     def build_train_step(self, lr_schedule=None):

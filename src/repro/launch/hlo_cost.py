@@ -66,6 +66,10 @@ _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}|"
                         r"true_computation=%?([\w.\-]+), "
                         r"false_computation=%?([\w.\-]+)")
 _CONST_RE = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+# dot operand: optional inline type annotation + %name (newer HLO prints
+# "dot(f32[128,128]{1,0} %lhs, f32[128,128]{1,0} %rhs)")
+_DOT_ARG_RE = re.compile(
+    r"(?:([a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?)\s+)?%([\w.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
@@ -204,24 +208,27 @@ def parse_hlo(text: str, default_group: int):
 
         # flops: dot ops (+ operand-byte traffic for the memory model)
         if op == "dot":
-            mops = re.search(r"dot\(%?([\w.\-]+),\s*%?([\w.\-]+)", line)
+            argstr = line.split("dot(", 1)[1].split(")", 1)[0]
+            args = _DOT_ARG_RE.findall(argstr)
+            # inline type annotation wins; fall back to the operand's
+            # definition earlier in this computation
+            lhs = (args[0][0] or shapes.get(args[0][1])) if args else None
+            rhs = (args[1][0] or shapes.get(args[1][1])) \
+                if len(args) > 1 else None
             mcd = _CONTRACT_RE.search(line)
             k = 1
             opbytes = 0
-            if mops:
-                lhs = shapes.get(mops.group(1))
-                rhs = shapes.get(mops.group(2))
-                if lhs:
-                    opbytes += _shape_bytes(lhs)
-                    if mcd:
-                        dims = _shape_dims(lhs)
-                        if dims:
-                            ldims = dims[0][1]
-                            for ci in mcd.group(1).split(","):
-                                if ci != "" and int(ci) < len(ldims):
-                                    k *= ldims[int(ci)]
-                if rhs:
-                    opbytes += _shape_bytes(rhs)
+            if lhs:
+                opbytes += _shape_bytes(lhs)
+                if mcd:
+                    dims = _shape_dims(lhs)
+                    if dims:
+                        ldims = dims[0][1]
+                        for ci in mcd.group(1).split(","):
+                            if ci != "" and int(ci) < len(ldims):
+                                k *= ldims[int(ci)]
+            if rhs:
+                opbytes += _shape_bytes(rhs)
             cc.flops += 2.0 * _numel(rtype) * k
             cc.bytes += opbytes + _shape_bytes(rtype)
 

@@ -80,6 +80,13 @@ def main(argv=None):
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} params={n/1e6:.2f}M mesh={dict(eng.sizes)} "
           f"comp={comp.strategy}/{comp.qw.name}/{comp.granularity.kind}")
+    # the static compression-execution plan the jitted step will run with
+    # (same cached object: built here from ShapeDtypeStructs, reused at
+    # trace time by Engine._aggregate_grads)
+    rest_plan, fsdp_plan = eng.comm_plans()
+    for tag, p in (("dp", rest_plan), ("fsdp", fsdp_plan)):
+        if p is not None:
+            print(f"plan[{tag}]: {p.summary()}")
 
     it = lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
     key = jax.random.key(args.seed)

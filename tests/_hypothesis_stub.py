@@ -1,0 +1,67 @@
+"""Optional-dependency shim for `hypothesis`.
+
+The property tests decorate with `@given(st....)`. When hypothesis is not
+installed in the container, importing those modules used to kill collection
+of the WHOLE file (ModuleNotFoundError), hiding every plain unit test in it.
+
+`install()` registers a minimal stand-in module under the name `hypothesis`
+whose `@given` replaces the test with a zero-argument function that calls
+`pytest.skip(...)` — the property tests report as skipped, everything else
+in the module collects and runs normally. With real hypothesis installed
+this module is never imported.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+
+def _strategy(*_args, **_kwargs):
+    """Opaque placeholder strategy (never drawn from: the test skips)."""
+    return None
+
+
+def install() -> None:
+    if "hypothesis" in sys.modules:  # real package (or stub) already present
+        return
+
+    import pytest
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = "stub: hypothesis is not installed; property tests skip"
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from", "booleans",
+                 "text", "tuples", "one_of", "just", "dictionaries",
+                 "composite", "data"):
+        setattr(st, name, _strategy)
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Zero-arg wrapper: pytest must not see the strategy-filled
+            # parameters of `fn` (it would demand fixtures for them).
+            def skipper():
+                pytest.skip("hypothesis not installed; property test skipped")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    settings.register_profile = lambda *a, **k: None
+    settings.load_profile = lambda *a, **k: None
+
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    hyp.assume = lambda *a, **k: True
+    hyp.note = lambda *a, **k: None
+    hyp.example = lambda *a, **k: (lambda fn: fn)
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -5,3 +5,10 @@ import sys
 # and benches must see 1 device (the dry-run sets 512 itself, in its own
 # process). Distributed tests spawn subprocesses with their own XLA_FLAGS.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # hypothesis is optional: property tests skip when it is absent
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_stub import install as _install_hypothesis_stub
+    _install_hypothesis_stub()
