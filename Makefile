@@ -6,13 +6,33 @@
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 
-# Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan).
-bench:
+# Tier-1 minus the long-running suites (distributed subprocess, system
+# end-to-end, per-arch smoke) — the inner-loop command. Full `make verify`
+# before shipping.
+verify-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow"
+
+# Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan
+# dispatches, adaptive controller). Writes BENCH_unitplan.json and
+# BENCH_controller.json, so it refuses to run on a dirty tree: committed
+# BENCH files must be attributable to a commit (BENCH_FORCE=1 overrides).
+bench: bench-guard
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -m benchmarks.run --only micro
+
+bench-guard:
+	@if [ -z "$$BENCH_FORCE" ] && [ -n "$$(git status --porcelain 2>/dev/null)" ]; then \
+	  echo "refusing to overwrite BENCH_*.json on a dirty tree (untracked files count);"; \
+	  echo "commit first, or override with BENCH_FORCE=1 make bench"; \
+	  exit 1; fi
 
 # Just the per-leaf-vs-planned dispatch benchmark -> BENCH_unitplan.json.
 bench-unitplan:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
 	  "from benchmarks.microbench import unitplan; unitplan()"
 
-.PHONY: verify bench bench-unitplan
+# Just the controller benchmark -> BENCH_controller.json.
+bench-controller:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
+	  "from benchmarks.microbench import controller; controller()"
+
+.PHONY: verify verify-fast bench bench-guard bench-unitplan bench-controller

@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.resnet9_cifar import ALEXNET, MLP, RESNET9, CNNConfig
-from repro.core import (CompressionConfig, Granularity,
+from repro.control import (CompressionDecision, Controller, Policy,
+                           accumulate, measurement_plan)
+from repro.core import (CompressionConfig, Granularity, Identity,
                         aggregate_simulated_workers, make_compressor,
                         stacked_mask)
 from repro.data import classification_batch
@@ -24,6 +26,16 @@ from repro.optim import piecewise_linear
 MODELS = {"resnet9": RESNET9, "alexnet": ALEXNET, "mlp": MLP}
 # per-model stable peak LRs (paper's 0.4 diverges at this scale/batch)
 LR = {"resnet9": 0.01, "alexnet": 0.05, "mlp": 0.01}
+
+
+def _momentum_step(params, vel, g, lr, momentum, nesterov):
+    """The (heavy-ball / nesterov) SGD update shared by train_cnn and the
+    controller step — one definition so the two paths cannot drift."""
+    vel = jax.tree_util.tree_map(lambda v, gg: momentum * v + gg, vel, g)
+    upd = (jax.tree_util.tree_map(lambda gg, v: gg + momentum * v, g, vel)
+           if nesterov else vel)
+    params = jax.tree_util.tree_map(lambda p, u: p - lr * u, params, upd)
+    return params, vel
 
 
 def train_cnn(model: str, comp: Optional[CompressionConfig], *,
@@ -50,18 +62,7 @@ def train_cnn(model: str, comp: Optional[CompressionConfig], *,
             g = jax.tree_util.tree_map(lambda x: jnp.mean(x, 0), wg)
         else:
             g, _ = aggregate_simulated_workers(wg, sm, comp, key)
-        if nesterov:
-            vel = jax.tree_util.tree_map(
-                lambda v, gg: momentum * v + gg, vel, g)
-            upd = jax.tree_util.tree_map(
-                lambda gg, v: gg + momentum * v, g, vel)
-        else:
-            vel = jax.tree_util.tree_map(
-                lambda v, gg: momentum * v + gg, vel, g)
-            upd = vel
-        params = jax.tree_util.tree_map(
-            lambda p, u: p - lr * u, params, upd)
-        return params, vel
+        return _momentum_step(params, vel, g, lr, momentum, nesterov)
 
     loss = float("nan")
     for i in range(steps):
@@ -92,3 +93,88 @@ def compare_granularities(model: str, qname: str, *, steps=120, seed=0,
 
 def csv_line(name: str, t_us: float, derived: str):
     print(f"{name},{t_us:.1f},{derived}")
+
+
+# --------------------------------------------------------------------------
+# controller-driven study harness (adaptive control loop over the same
+# simulated-worker Algorithm-1 path train_cnn uses)
+# --------------------------------------------------------------------------
+
+def dense_decision() -> CompressionDecision:
+    """No-compression decision (identity Q_W/Q_M == plain gradient mean)."""
+    return CompressionDecision(qw=Identity(), qm=Identity())
+
+
+def cnn_controller(model: str, policy: Policy, *,
+                   base: Optional[CompressionDecision] = None,
+                   workers: int = 4, momentum: float = 0.9,
+                   nesterov: bool = False, replan_every: int = 10,
+                   collect_telemetry: Optional[bool] = None,
+                   cache: Optional[dict] = None) -> Controller:
+    """A Controller whose data plane is the jitted simulated-worker CNN
+    step (numerically the train_cnn step for the decision's config).
+    Pass one shared `cache` dict across controllers to reuse compiled
+    steps over a whole study sweep."""
+    cfg = MODELS[model]
+    shapes = jax.eval_shape(lambda k: init_cnn(cfg, k), jax.random.key(0))
+    sm = stacked_mask(shapes)
+    mplan = measurement_plan(shapes, sm)
+    collect = (policy.needs_telemetry if collect_telemetry is None
+               else bool(collect_telemetry))
+    em = getattr(policy, "needs_entire_model", True)
+
+    def build(decision: CompressionDecision):
+        comp = decision.to_config()
+
+        @jax.jit
+        def step(params, vel, batch_data, key, lr, telem):
+            wb = jax.tree_util.tree_map(
+                lambda x: x.reshape((workers, -1) + x.shape[1:]),
+                batch_data)
+            wg = jax.vmap(lambda b: jax.grad(
+                lambda p: cnn_loss(cfg, p, b))(params))(wb)
+            if collect:
+                g, _, inc = aggregate_simulated_workers(
+                    wg, sm, comp, key, telemetry_plan=mplan,
+                    telemetry_entire_model=em)
+                telem = accumulate(telem, inc)
+            else:
+                g, _ = aggregate_simulated_workers(wg, sm, comp, key)
+            params, vel = _momentum_step(params, vel, g, lr, momentum,
+                                         nesterov)
+            return params, vel, telem
+
+        return step
+
+    # tag = every build input besides the decision (see engine_controller)
+    return Controller(policy, build, base or dense_decision(), mplan,
+                      replan_every=replan_every, collect_telemetry=collect,
+                      cache=cache,
+                      cache_tag=("cnn", model, workers, momentum, nesterov,
+                                 em))
+
+
+def train_cnn_with_controller(model: str, ctrl: Controller, *,
+                              steps: int = 120, batch: int = 64,
+                              lr_peak: Optional[float] = None,
+                              seed: int = 0) -> Tuple[float, float]:
+    """train_cnn's loop driven through a Controller: same data stream,
+    keys and LR schedule, with the step fetched from the decision cache
+    every iteration and telemetry fed back at re-plan boundaries.
+    Returns (final_test_accuracy, final_train_loss)."""
+    cfg = MODELS[model]
+    lr_peak = LR[model] if lr_peak is None else lr_peak
+    key = jax.random.key(seed)
+    params = init_cnn(cfg, key)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    sched = piecewise_linear(lr_peak, steps, max(1, steps // 8))
+    for i in range(steps):
+        b = classification_batch(jax.random.fold_in(key, i), batch)
+        fn = ctrl.step_fn()
+        params, vel, telem = fn(params, vel, b,
+                                jax.random.fold_in(key, 10_000 + i),
+                                sched(i), ctrl.telemetry)
+        ctrl.observe(telem, i)
+    test = classification_batch(jax.random.fold_in(key, 999_999), 256)
+    return (float(cnn_accuracy(cfg, params, test)),
+            float(cnn_loss(cfg, params, test)))

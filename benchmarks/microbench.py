@@ -33,6 +33,27 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
+def _block(r):
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, r)
+    return r
+
+
+def _time_median(fn, *args, reps=5, warmup=2):
+    """us per call: `warmup` discarded calls, then the median of `reps`
+    timed calls — the controller bench's noise discipline (single-shot
+    numbers on a shared container are meaningless)."""
+    for _ in range(warmup):
+        _block(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        _block(fn(*args))
+        ts.append(time.time() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
 def operators():
     x = jax.random.normal(KEY, (D,))
     tree = {"blocks": {"w": x.reshape(64, -1, 128)}}
@@ -142,7 +163,95 @@ def unitplan(out_path: str = None):
     return report
 
 
+# --------------------------------------------------------------------------
+# adaptive-controller benchmark: telemetry overhead + replan/retrace cost
+# --------------------------------------------------------------------------
+
+def controller(out_path: str = None, steps: int = 20):
+    """BENCH_controller.json: (1) per-step cost of the in-step telemetry
+    leg (median-of-5, warmup discarded), (2) the cost of a policy switch
+    — cold build+compile of a new decision's step vs re-fetching a cached
+    one, (3) steps/s of a full training loop under StaticPolicy vs
+    VarianceBudgetPolicy (re-plan every 5)."""
+    from benchmarks.common import (MODELS, cnn_controller,
+                                   train_cnn_with_controller)
+    from repro.control import (CompressionDecision, StaticPolicy,
+                               VarianceBudgetPolicy)
+    from repro.data import classification_batch
+    from repro.models.cnn import init_cnn
+
+    model, workers, batch = "resnet9", 4, 32
+    base = CompressionDecision(qw=make_compressor("topk", ratio=0.05),
+                               granularity=Granularity("layerwise"))
+    alt = CompressionDecision(qw=make_compressor("topk", ratio=0.05),
+                              granularity=Granularity("entire_model"))
+    cfg = MODELS[model]
+    params = init_cnn(cfg, KEY)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    b = classification_batch(KEY, batch)
+    lr = jnp.float32(0.01)
+    report = {}
+
+    # (1) telemetry overhead: the same decision's step with/without the
+    # telemetry leg.
+    off = cnn_controller(model, StaticPolicy(), base=base, workers=workers,
+                         collect_telemetry=False)
+    on = cnn_controller(model, StaticPolicy(), base=base, workers=workers,
+                        collect_telemetry=True)
+    f_off, f_on = off.step_fn(), on.step_fn()
+    us_off = _time_median(f_off, params, vel, b, KEY, lr, off.telemetry)
+    us_on = _time_median(f_on, params, vel, b, KEY, lr, on.telemetry)
+    report["telemetry"] = {
+        "step_us_off": round(us_off, 1),
+        "step_us_on": round(us_on, 1),
+        "overhead_pct": round(100.0 * (us_on - us_off) / max(us_off, 1e-9),
+                              1),
+    }
+    csv_line("controller_step_no_telemetry", us_off, "resnet9 median-of-5")
+    csv_line("controller_step_telemetry", us_on, "resnet9 median-of-5")
+
+    # (2) replan cost: switching to a NEW decision pays one build+compile;
+    # switching BACK to a cached decision pays a dict lookup + dispatch.
+    t0 = time.time()
+    off.set_decision(alt)
+    _block(off.step_fn()(params, vel, b, KEY, lr, None))
+    cold_ms = (time.time() - t0) * 1e3
+    builds_after_cold = off.builds
+    t0 = time.time()
+    off.set_decision(base)
+    _block(off.step_fn()(params, vel, b, KEY, lr, None))
+    cached_ms = (time.time() - t0) * 1e3
+    assert off.builds == builds_after_cold == 2, off.builds  # no retrace
+    report["replan"] = {"cold_build_ms": round(cold_ms, 1),
+                        "cached_switch_ms": round(cached_ms, 1)}
+    csv_line("controller_replan_cold", cold_ms * 1e3, "new decision")
+    csv_line("controller_replan_cached", cached_ms * 1e3, "cached decision")
+
+    # (3) steps/s: static vs adaptive policy end to end.
+    for name, policy in [("static", StaticPolicy()),
+                         ("variance_budget",
+                          VarianceBudgetPolicy(budget=0.3))]:
+        ctrl = cnn_controller(model, policy, base=base, workers=workers,
+                              replan_every=5)
+        t0 = time.time()
+        train_cnn_with_controller(model, ctrl, steps=steps, batch=batch)
+        dt = time.time() - t0
+        report.setdefault("policies", {})[name] = {
+            "steps_per_s": round(steps / dt, 2),
+            "builds": ctrl.builds,
+            "switches": len(ctrl.switches),
+        }
+        csv_line(f"controller_policy_{name}", dt / steps * 1e6,
+                 f"builds={ctrl.builds}")
+
+    path = out_path or os.path.join(_REPO_ROOT, "BENCH_controller.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
 def run():
     operators()
     kernels()
     unitplan()
+    controller()

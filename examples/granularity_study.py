@@ -1,6 +1,11 @@
 """Mini reproduction of the paper's empirical study (Table view):
 layer-wise vs entire-model accuracy for several compressors on the
-CPU-scale DAWNBench stand-ins. ~10 minutes on one CPU core.
+CPU-scale DAWNBench stand-ins — driven through the adaptive-control
+subsystem: ONE Controller per model sweeps every (compressor,
+granularity) as a CompressionDecision, reusing cached UnitPlans and
+compiled steps across the whole sweep (the baseline step compiles once,
+not once per row). `--adaptive` appends rows where the framework itself
+picks the configuration (the paper's closing recommendation).
 
 Run:  PYTHONPATH=src python examples/granularity_study.py [--steps 60]
 """
@@ -12,7 +17,20 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-from benchmarks.common import compare_granularities  # noqa: E402
+from benchmarks.common import (cnn_controller, dense_decision,  # noqa: E402
+                               train_cnn_with_controller)
+from repro.control import (CompressionDecision, StaticPolicy,  # noqa: E402
+                           make_policy)
+from repro.core import Granularity, make_compressor  # noqa: E402
+
+RUNS = [
+    ("topk", {"ratio": 0.01}),
+    ("randomk", {"ratio": 0.01}),
+    ("terngrad", {}),
+    ("qsgd", {"levels": 4}),
+    ("adaptive_threshold", {"alpha": 0.05}),
+    ("threshold_v", {"v": 1e-3}),
+]
 
 
 def main():
@@ -20,27 +38,55 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--model", default="resnet9",
                     choices=["resnet9", "alexnet", "mlp"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="also run the adaptive policies (the framework "
+                         "picks granularity/ratio from telemetry)")
+    ap.add_argument("--replan-every", type=int, default=15)
     args = ap.parse_args()
 
-    runs = [
-        ("topk", {"ratio": 0.01}),
-        ("randomk", {"ratio": 0.01}),
-        ("terngrad", {}),
-        ("qsgd", {"levels": 4}),
-        ("adaptive_threshold", {"alpha": 0.05}),
-        ("threshold_v", {"v": 1e-3}),
-    ]
+    cache: dict = {}  # shared decision -> compiled-step cache for the sweep
+    ctrl = cnn_controller(args.model, StaticPolicy(), cache=cache)
+
+    def run(decision):
+        ctrl.set_decision(decision)
+        acc, _ = train_cnn_with_controller(args.model, ctrl,
+                                           steps=args.steps)
+        return acc
+
     print(f"model={args.model} steps={args.steps}")
     print(f"{'compressor':22s} {'layer-wise':>10s} {'entire':>10s} "
           f"{'baseline':>10s}  verdict")
-    for name, kw in runs:
-        r = compare_granularities(args.model, name, steps=args.steps, **kw)
-        verdict = ("layer-wise better" if r["layerwise"] > r["entire_model"]
-                   + 0.02 else
-                   "entire-model better" if r["entire_model"] >
-                   r["layerwise"] + 0.02 else "comparable")
-        print(f"{name:22s} {r['layerwise']:10.3f} {r['entire_model']:10.3f} "
-              f"{r['baseline']:10.3f}  {verdict}")
+    baseline = run(dense_decision())
+    for name, kw in RUNS:
+        acc = {}
+        for gran in ("layerwise", "entire_model"):
+            acc[gran] = run(CompressionDecision(
+                qw=make_compressor(name, **kw),
+                granularity=Granularity(gran)))
+        verdict = ("layer-wise better"
+                   if acc["layerwise"] > acc["entire_model"] + 0.02 else
+                   "entire-model better"
+                   if acc["entire_model"] > acc["layerwise"] + 0.02
+                   else "comparable")
+        print(f"{name:22s} {acc['layerwise']:10.3f} "
+              f"{acc['entire_model']:10.3f} {baseline:10.3f}  {verdict}")
+    print(f"[cache] {len(cache)} compiled steps for "
+          f"{1 + 2 * len(RUNS)} sweep rows ({ctrl.builds} builds)")
+
+    if not args.adaptive:
+        return
+    print("\nadaptive policies (framework picks the configuration):")
+    base = CompressionDecision(qw=make_compressor("topk", ratio=0.01),
+                               granularity=Granularity("layerwise"))
+    for pname, kw in [("granularity_switch", {}),
+                      ("variance_budget", {"budget": 0.3})]:
+        actrl = cnn_controller(args.model, make_policy(pname, **kw),
+                               base=base, replan_every=args.replan_every,
+                               cache=cache)
+        acc, _ = train_cnn_with_controller(args.model, actrl,
+                                           steps=args.steps)
+        print(f"{pname:22s} {acc:10.3f}  final={actrl.decision.describe()} "
+              f"switches={len(actrl.switches)} builds={actrl.builds}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,13 @@
+"""Adaptive compression control plane: in-step telemetry, pluggable
+policies, and a decision -> (UnitPlan, compiled step) cache. See
+README.md §"Adaptive control loop"."""
+from repro.control.telemetry import (TelemetryState, accumulate,
+                                     init_telemetry, measure,
+                                     measurement_plan, payload_bits_per_step,
+                                     summarize, to_json, unit_omegas)
+from repro.control.policy import (POLICIES, RATIO_LADDER, BitBudgetPolicy,
+                                  CompressionDecision,
+                                  GranularitySwitchPolicy, PerDimRatio,
+                                  Policy, StaticPolicy,
+                                  VarianceBudgetPolicy, make_policy)
+from repro.control.controller import Controller, engine_controller

@@ -1,0 +1,154 @@
+"""The adaptive compression controller: telemetry → policy → decision →
+plan/step cache.
+
+The Controller is harness-agnostic: it owns the *control plane* (what to
+compress, how hard, at which granularity) and delegates the *data plane*
+to a `build_step(decision) -> step_fn` factory supplied by the harness
+(launch.engine for the sharded LM engine, benchmarks.common for the
+simulated-worker CNN study). Compiled steps are cached per decision, so a
+policy that revisits a decision NEVER retraces — the acceptance property
+`builds == number of distinct decisions` is exposed as `self.builds`.
+
+Lifecycle per step i:
+
+    fn = ctrl.step_fn()              # cached jitted step for the decision
+    ... run fn, threading ctrl.telemetry if ctrl.collect ...
+    ctrl.observe(new_telem, i)       # store window; re-plan every K steps
+
+At a re-plan boundary the controller summarizes the telemetry window on
+the host, asks the policy for a decision, records the window + any switch
+for JSON export, and resets the window.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.plan import UnitPlan
+
+from repro.control.policy import CompressionDecision, Policy
+from repro.control.telemetry import (TelemetryState, init_telemetry,
+                                     summarize, to_json)
+
+
+class Controller:
+    def __init__(self, policy: Policy, build_step: Callable,
+                 base: CompressionDecision, mplan: UnitPlan, *,
+                 replan_every: int = 20,
+                 collect_telemetry: Optional[bool] = None,
+                 cache: Optional[dict] = None, cache_tag=None):
+        """`cache` may be shared between controllers (e.g. a sweep) — it
+        is keyed on (decision, telemetry-enabled, cache_tag) so steps
+        with different build shapes never collide; harnesses pass their
+        extra build flags (e.g. the entire-model telemetry leg) as
+        `cache_tag`."""
+        self.policy = policy
+        self.build_step = build_step
+        self.mplan = mplan
+        self.replan_every = max(1, int(replan_every))
+        self.collect = (policy.needs_telemetry if collect_telemetry is None
+                        else bool(collect_telemetry))
+        self.decision = base
+        self.telemetry: Optional[TelemetryState] = (
+            init_telemetry(mplan) if self.collect else None)
+        self._cache = {} if cache is None else cache
+        self._cache_tag = cache_tag
+        self.builds = 0            # build_step invocations == retraces
+        self.switches: List[Dict] = []
+        self.windows: List[Dict] = []
+
+    # ---- data plane ------------------------------------------------------
+    def step_fn(self):
+        """The compiled step for the current decision (cached)."""
+        return self._bundle(self.decision)
+
+    def _bundle(self, decision: CompressionDecision):
+        key = (decision, self.collect, self._cache_tag)
+        if key not in self._cache:
+            self._cache[key] = self.build_step(decision)
+            self.builds += 1
+        return self._cache[key]
+
+    def config(self):
+        return self.decision.to_config()
+
+    def set_decision(self, decision: CompressionDecision) -> None:
+        """Force a decision (sweeps / tests). Keeps the cache."""
+        self.decision = decision
+        if self.collect:
+            self.telemetry = init_telemetry(self.mplan)
+
+    # ---- control plane ---------------------------------------------------
+    def observe(self, telemetry: Optional[TelemetryState],
+                step_idx: int) -> bool:
+        """Record the step's returned telemetry state; at a re-plan
+        boundary summarize the window and consult the policy. Returns
+        True when the decision changed."""
+        if self.collect and telemetry is not None:
+            self.telemetry = telemetry
+        if (step_idx + 1) % self.replan_every:
+            return False
+        return self._replan(step_idx)
+
+    def _replan(self, step_idx: int) -> bool:
+        summary = (summarize(self.telemetry, self.mplan,
+                             qw=self.config().qw)
+                   if self.collect else {})
+        self.windows.append({"step": step_idx,
+                             "decision": self.decision.describe(),
+                             "summary": summary})
+        new = self.policy.decide(summary, self.decision, self.mplan)
+        changed = new != self.decision
+        if changed:
+            self.switches.append({"step": step_idx,
+                                  "from": self.decision.describe(),
+                                  "to": new.describe()})
+            self.decision = new
+        if self.collect:  # fresh window per re-plan interval
+            self.telemetry = init_telemetry(self.mplan)
+        return changed
+
+    # ---- export ----------------------------------------------------------
+    def report(self) -> Dict:
+        return {
+            "policy": self.policy.name,
+            "replan_every": self.replan_every,
+            "decision": self.decision.describe(),
+            "builds": self.builds,
+            "switches": self.switches,
+            "windows": self.windows,
+        }
+
+    def export(self, path: str) -> None:
+        to_json(self.report(), path)
+
+
+def engine_controller(engine, policy: Policy, *, lr_schedule=None,
+                      base: Optional[CompressionDecision] = None,
+                      replan_every: int = 20,
+                      collect_telemetry: Optional[bool] = None,
+                      cache: Optional[dict] = None) -> Controller:
+    """Controller over launch.engine.Engine's sharded train step. The
+    step factory threads the decision's CompressionConfig (and, when
+    telemetry is on, the TelemetryState leg) through
+    Engine.build_train_step."""
+    from repro.core.aggregation import no_compression
+    if base is None:
+        base = CompressionDecision.from_config(
+            engine.comp if engine.comp is not None else no_compression())
+    collect = (policy.needs_telemetry if collect_telemetry is None
+               else bool(collect_telemetry))
+    em = getattr(policy, "needs_entire_model", True)
+
+    def build(decision: CompressionDecision):
+        return engine.build_train_step(lr_schedule,
+                                       comp=decision.to_config(),
+                                       telemetry=collect,
+                                       telemetry_entire_model=em)
+
+    # the tag carries every build input besides the decision, so a cache
+    # shared across controllers never hands back a step compiled for a
+    # different engine/schedule/telemetry shape
+    return Controller(policy, build, base, engine.measurement_plan(),
+                      replan_every=replan_every, collect_telemetry=collect,
+                      cache=cache,
+                      cache_tag=("engine", engine, lr_schedule, em))

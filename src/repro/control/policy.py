@@ -1,0 +1,310 @@
+"""Pluggable compression policies: telemetry window in, decision out.
+
+Policies run in plain Python at re-plan boundaries (every K steps) — they
+never appear inside the jitted step. A `CompressionDecision` is a frozen,
+hashable value object: the controller keys its (UnitPlan, compiled step)
+cache on it, so a policy that oscillates between a small set of decisions
+never retraces twice.
+
+  StaticPolicy             today's behavior: one fixed decision.
+  VarianceBudgetPolicy     per-bucket sparsification ratio chosen to keep
+                           relative compression error under a budget
+                           (Tsuzuku et al.'s variance-based compression,
+                           applied per size class).
+  GranularitySwitchPolicy  layer-wise vs entire-model by the paper's
+                           Trace(A) bound evaluated on MEASURED omegas
+                           (theory.noise_bounds_from_plan) against the
+                           measured entire-model counterfactual.
+  BitBudgetPolicy          greedy per-bucket ratio allocation maximizing
+                           captured gradient energy under a total
+                           uplink-bits/step budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+from repro.core.aggregation import CompressionConfig
+from repro.core.compressors import Compressor, Identity
+from repro.core.granularity import Granularity
+from repro.core.plan import UnitPlan
+from repro.core import theory
+
+from repro.control.telemetry import unit_omegas
+
+RATIO_LADDER = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerDimRatio(Compressor):
+    """Wrap a ratio-bearing compressor with a per-unit-dimension ratio
+    table. Inside plan execution every unit arrives flat with a static
+    dimension, so the lookup is trace-time static; payload/omega
+    accounting resolves per dim the same way (which is how comm_report
+    tracks per-bucket ratios without knowing about decisions)."""
+
+    name: str = "per_dim_ratio"
+    base: Compressor = Identity()
+    table: Tuple[Tuple[int, float], ...] = ()  # (unit dim, ratio)
+
+    def __post_init__(self):
+        object.__setattr__(self, "name", f"{self.base.name}[adaptive]")
+        object.__setattr__(self, "unbiased", self.base.unbiased)
+
+    def for_dim(self, d: int) -> Compressor:
+        for dim, r in self.table:
+            if dim == d:
+                return dataclasses.replace(self.base, ratio=r)
+        return self.base
+
+    def sim(self, x, key):
+        return self.for_dim(x.shape[0]).sim(x, key)
+
+    def encode(self, x, key):
+        return self.for_dim(x.shape[0]).encode(x, key)
+
+    def decode(self, payload, d, dtype=None):
+        c = self.for_dim(d)
+        return (c.decode(payload, d) if dtype is None
+                else c.decode(payload, d, dtype))
+
+    def payload_bits(self, d: int) -> int:
+        return self.for_dim(d).payload_bits(d)
+
+    def omega(self, d: int) -> Optional[float]:
+        return self.for_dim(d).omega(d)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionDecision:
+    """A policy's output: everything needed to materialize a
+    CompressionConfig (and therefore a UnitPlan + jitted step). Frozen +
+    tuple fields => hashable, the controller's cache key."""
+
+    granularity: Granularity = Granularity("layerwise")
+    qw: Compressor = Identity()
+    qm: Compressor = Identity()
+    strategy: str = "simulated"
+    error_feedback: bool = False
+    wire_dtype: str = "float32"
+    ratio_overrides: Tuple[Tuple[int, float], ...] = ()  # unit dim -> ratio
+
+    def compressor_for_dim(self, d: int) -> Compressor:
+        for dim, r in self.ratio_overrides:
+            if dim == d and hasattr(self.qw, "ratio"):
+                return dataclasses.replace(self.qw, ratio=r)
+        return self.qw
+
+    def to_config(self) -> CompressionConfig:
+        qw = self.qw
+        if (self.ratio_overrides and hasattr(qw, "ratio")
+                and self.strategy != "shared_random"):
+            # shared_random's collective requires the bare RandomK (its
+            # shared-seed index trick reads qw directly); overrides are
+            # ignored there — the ratio policies also decline to emit them.
+            qw = PerDimRatio(base=qw, table=self.ratio_overrides)
+        return CompressionConfig(
+            qw=qw, qm=self.qm, granularity=self.granularity,
+            strategy=self.strategy, error_feedback=self.error_feedback,
+            wire_dtype=self.wire_dtype)
+
+    @classmethod
+    def from_config(cls, cfg: CompressionConfig) -> "CompressionDecision":
+        qw, overrides = cfg.qw, ()
+        if isinstance(qw, PerDimRatio):
+            qw, overrides = qw.base, qw.table
+        return cls(granularity=cfg.granularity, qw=qw, qm=cfg.qm,
+                   strategy=cfg.strategy, error_feedback=cfg.error_feedback,
+                   wire_dtype=cfg.wire_dtype, ratio_overrides=overrides)
+
+    def payload_bits(self, unit_dims: Sequence[int]) -> int:
+        """Uplink payload bits/step under this decision's per-dim ratios."""
+        return sum(self.compressor_for_dim(d).payload_bits(d)
+                   for d in unit_dims)
+
+    def describe(self) -> str:
+        ov = (f" overrides={len(self.ratio_overrides)}"
+              if self.ratio_overrides else "")
+        return (f"{self.granularity.kind}/{self.qw.name}"
+                f"/{self.strategy}{ov}")
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """decide() runs on the host at a re-plan boundary. `summary` is the
+    telemetry window summary (telemetry.summarize), `current` the active
+    decision, `mplan` the measurement plan. Must be pure: same inputs,
+    same decision."""
+
+    name: str
+    needs_telemetry: bool
+
+    def decide(self, summary: Dict, current: CompressionDecision,
+               mplan: Optional[UnitPlan] = None) -> CompressionDecision:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPolicy:
+    """Today's behavior: never deviates from the active decision."""
+
+    name: str = "static"
+    needs_telemetry: bool = False
+    needs_entire_model: bool = True  # for telemetry-export-only runs
+
+    def decide(self, summary, current, mplan=None):
+        return current
+
+
+def _base_ratio(decision: CompressionDecision, dim: int) -> float:
+    c = decision.compressor_for_dim(dim)
+    return float(getattr(c, "ratio", 1.0))
+
+
+def _pick_ratio(ladder: Sequence[float], threshold: float) -> float:
+    """Smallest ladder ratio >= threshold (max ladder entry if none)."""
+    for r in sorted(ladder):
+        if r >= threshold:
+            return r
+    return max(ladder)
+
+
+@dataclasses.dataclass(frozen=True)
+class VarianceBudgetPolicy:
+    """Per-bucket ratio to keep predicted relative compression error
+    within `budget` (à la Tsuzuku et al.: compress only as much as the
+    gradient's noise floor allows). The error model is the monotone
+    first-order one: rel_err(r) ≈ rel_err_measured · r_current / r, so a
+    tighter budget always selects an equal-or-larger ratio — i.e. never
+    fewer bits (property-tested)."""
+
+    budget: float = 0.1
+    ladder: Tuple[float, ...] = RATIO_LADDER
+    name: str = "variance_budget"
+    needs_telemetry: bool = True
+    needs_entire_model: bool = False
+
+    def decide(self, summary, current, mplan=None):
+        if (not summary.get("buckets") or not hasattr(current.qw, "ratio")
+                or current.strategy == "shared_random"):
+            return current
+        overrides = []
+        for entry in summary["buckets"]:
+            dim = entry["dim"]
+            r_cur = _base_ratio(current, dim)
+            need = entry["rel_err"] * r_cur / max(self.budget, 1e-12)
+            overrides.append((dim, _pick_ratio(self.ladder, need)))
+        return dataclasses.replace(current,
+                                   ratio_overrides=tuple(sorted(overrides)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GranularitySwitchPolicy:
+    """The paper's framework-should-choose conclusion, executed: compare
+    the layer-wise noise trace Σ_j d_j(1+Ω̂_j) (Trace(A) on measured
+    per-unit omegas, via theory.noise_bounds_from_plan) against the
+    measured entire-model trace d·(1+Ω̂_em), and pick the smaller.
+    `margin` is switch hysteresis (relative advantage required to move
+    away from the current granularity)."""
+
+    margin: float = 0.05
+    name: str = "granularity_switch"
+    needs_telemetry: bool = True
+    needs_entire_model: bool = True
+
+    def decide(self, summary, current, mplan=None):
+        if (mplan is None or not summary.get("buckets")
+                or current.granularity.kind == "blockwise"):
+            return current
+        em = summary.get("entire_model")
+        if not em:  # counterfactual leg not measured this window
+            return current
+        omegas = unit_omegas(summary, mplan, metric="rel_err")
+        lw_trace, _ = theory.noise_bounds_from_plan(mplan,
+                                                    measured_w=omegas)
+        em_trace = em["dim"] * (1.0 + em["rel_err"])
+        if current.granularity.kind == "layerwise":
+            better = em_trace < lw_trace * (1.0 - self.margin)
+            target = "entire_model" if better else "layerwise"
+        else:
+            better = lw_trace < em_trace * (1.0 - self.margin)
+            target = "layerwise" if better else "entire_model"
+        if target == current.granularity.kind:
+            return current
+        return dataclasses.replace(current, granularity=Granularity(target))
+
+
+@dataclasses.dataclass(frozen=True)
+class BitBudgetPolicy:
+    """Maximize captured gradient energy subject to a total uplink
+    bits/step budget: start every bucket at the smallest ladder ratio,
+    then greedily upgrade the bucket with the best marginal
+    energy-per-bit until the budget is exhausted.
+
+    The smallest ladder ratio is the floor: when even the floor
+    allocation exceeds `bits_per_step`, the floor decision is returned
+    anyway (the policy compresses as hard as it can rather than stalling
+    training) — size the ladder/budget so the floor fits."""
+
+    bits_per_step: int = 1 << 22
+    ladder: Tuple[float, ...] = RATIO_LADDER
+    name: str = "bit_budget"
+    needs_telemetry: bool = True
+    needs_entire_model: bool = False
+
+    def _bits(self, decision, dim, n, r):
+        c = dataclasses.replace(decision.qw, ratio=r)
+        return n * c.payload_bits(dim)
+
+    def decide(self, summary, current, mplan=None):
+        buckets = summary.get("buckets")
+        if (not buckets or not hasattr(current.qw, "ratio")
+                or current.strategy == "shared_random"):
+            return current
+        ladder = sorted(self.ladder)
+        level = {e["dim"]: 0 for e in buckets}
+        info = {e["dim"]: e for e in buckets}
+
+        def energy(entry, r):
+            r_cur = _base_ratio(current, entry["dim"])
+            rel_err = min(1.0, entry["rel_err"] * r_cur / max(r, 1e-12))
+            return (1.0 - rel_err) * entry["grad_norm_sq"]
+
+        total = sum(self._bits(current, d, info[d]["n_units"], ladder[0])
+                    for d in level)
+        while True:
+            best, best_gain = None, 0.0
+            for d, lv in level.items():
+                if lv + 1 >= len(ladder):
+                    continue
+                e = info[d]
+                extra = (self._bits(current, d, e["n_units"], ladder[lv + 1])
+                         - self._bits(current, d, e["n_units"], ladder[lv]))
+                if total + extra > self.bits_per_step:
+                    continue
+                # extra == 0: rounding kept k identical — a free upgrade
+                gain = (float("inf") if extra <= 0 else
+                        (energy(e, ladder[lv + 1]) - energy(e, ladder[lv]))
+                        / extra)
+                if gain > best_gain:
+                    best, best_gain, best_extra = d, gain, extra
+            if best is None:
+                break
+            level[best] += 1
+            total += best_extra
+        overrides = tuple(sorted((d, ladder[lv]) for d, lv in level.items()))
+        return dataclasses.replace(current, ratio_overrides=overrides)
+
+
+POLICIES = ("static", "variance_budget", "granularity_switch", "bit_budget")
+
+
+def make_policy(name: str, **kw) -> Policy:
+    """Build a policy by CLI name. kw are dataclass fields (budget=,
+    bits_per_step=, margin=, ladder=)."""
+    table = {"static": StaticPolicy, "variance_budget": VarianceBudgetPolicy,
+             "granularity_switch": GranularitySwitchPolicy,
+             "bit_budget": BitBudgetPolicy}
+    if name not in table:
+        raise ValueError(f"unknown policy {name!r}; have {sorted(table)}")
+    return table[name](**kw)

@@ -1,0 +1,226 @@
+"""In-step compression telemetry over UnitPlan size-class buckets.
+
+The control plane's sensors. A `TelemetryState` is a small pytree carried
+through the jitted train step; `measure` produces a one-step increment by
+ONE extra vmapped compressor pass per size-class bucket of a fixed
+*measurement plan* (always the layerwise plan of the gradient tree, so the
+state's shapes never change when the controller switches the *execution*
+granularity) plus one pass on the flat gradient (the entire-model
+counterfactual). No per-leaf loops anywhere: the gather/scatter machinery
+is the UnitPlan's reshape-only run decomposition.
+
+Measured per size class b (all sums over the bucket's (n_units, dim) rows):
+
+  grad_sum / grad_sumsq    Σx, Σx²  — gradient norm & entry variance
+  qw_sumsq                 Σ Q_W(x)²  — empirical Ω̂ = qw_sumsq/grad_sumsq−1
+  qw_errsq                 Σ (Q_W(x)−x)² — per-unit compression error
+  agg_errsq                Σ (ŷ−x)²   — end-to-end pipeline error (ŷ = the
+                                        aggregated gradient the step applied)
+
+plus the same three second moments for the whole flat gradient compressed
+as ONE unit (`em_*`) — the signal `GranularitySwitchPolicy` compares
+against the layer-wise trace.
+
+Everything here is traceable (jit/vmap/shard_map-safe); `summarize` runs
+on the host at re-plan boundaries and produces plain-Python JSON.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor
+from repro.core.granularity import Granularity
+from repro.core.plan import UnitPlan, build_plan
+
+Array = jax.Array
+
+_EPS = 1e-30
+
+
+class TelemetryState(NamedTuple):
+    """Accumulated per-size-class statistics (a pytree of f32 arrays).
+
+    `B` below is the number of size-class buckets of the measurement plan;
+    scalars are 0-d. All fields are running sums over the accumulation
+    window except `steps` (the window length).
+    """
+    steps: Array        # ()  number of accumulated steps
+    grad_sum: Array     # (B,) Σ x
+    grad_sumsq: Array   # (B,) Σ x²        (== Σ_units ‖x_u‖²)
+    qw_sumsq: Array     # (B,) Σ Q_W(x)²
+    qw_errsq: Array     # (B,) Σ (Q_W(x) − x)²
+    agg_errsq: Array    # (B,) Σ (ŷ − x)²  (zero when ŷ not supplied)
+    em_sumsq: Array     # ()  ‖x_flat‖²
+    em_qw_sumsq: Array  # ()  ‖Q_W(x_flat)‖²
+    em_errsq: Array     # ()  ‖Q_W(x_flat) − x_flat‖²
+
+
+def measurement_plan(tree, stacked) -> UnitPlan:
+    """The fixed layer-wise UnitPlan telemetry is measured over.
+
+    Independent of the *active* execution granularity, so TelemetryState
+    shapes are stable across controller decisions (no retrace on switch).
+    """
+    return build_plan(tree, stacked, Granularity("layerwise"))
+
+
+def init_telemetry(mplan: UnitPlan) -> TelemetryState:
+    b = mplan.num_dispatches
+    z = jnp.zeros((b,), jnp.float32)
+    s = jnp.zeros((), jnp.float32)
+    return TelemetryState(steps=s, grad_sum=z, grad_sumsq=z, qw_sumsq=z,
+                          qw_errsq=z, agg_errsq=z, em_sumsq=s,
+                          em_qw_sumsq=s, em_errsq=s)
+
+
+def accumulate(state: TelemetryState, inc: TelemetryState) -> TelemetryState:
+    return jax.tree_util.tree_map(jnp.add, state, inc)
+
+
+def _bucket_q(qw: Compressor, x: Array, keys: Array) -> Array:
+    if x.shape[0] == 1:
+        return qw.sim(x[0], keys[0])[None]
+    return jax.vmap(lambda v, k: qw.sim(v, k))(x, keys)
+
+
+def measure(mplan: UnitPlan, qw: Compressor, grads, key: Array,
+            grads_hat=None, entire_model: bool = True) -> TelemetryState:
+    """One-step telemetry increment for `grads` (and optionally the
+    aggregated output `grads_hat` the step actually applied).
+
+    Uses the plan's own PRNG fold tables, so when the active decision IS
+    layerwise the measured Q_W stream matches the executed one.
+    `entire_model=False` skips the flat counterfactual compression pass
+    (its `em_*` fields stay zero) — only GranularitySwitchPolicy and
+    telemetry export consume it, and it is the expensive leg (one
+    full-model Q_W per step).
+    """
+    leaves = jax.tree_util.tree_leaves(grads)
+    hat_leaves = (jax.tree_util.tree_leaves(grads_hat)
+                  if grads_hat is not None else None)
+    flat = mplan.flatten(grads) if mplan.needs_flat else None
+    hat_flat = (mplan.flatten(grads_hat)
+                if grads_hat is not None and mplan.needs_flat else None)
+    keys = mplan.unit_keys(key)
+
+    gsum, gsq, qsq, qerr, aerr = [], [], [], [], []
+    for b in mplan.buckets:
+        x = mplan._gather_runs(leaves, flat, b)
+        kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
+        q = _bucket_q(qw, x, kb)
+        gsum.append(jnp.sum(x))
+        gsq.append(jnp.sum(x * x))
+        qsq.append(jnp.sum(q * q))
+        qerr.append(jnp.sum((q - x) ** 2))
+        if hat_leaves is not None:
+            y = mplan._gather_runs(hat_leaves, hat_flat, b)
+            aerr.append(jnp.sum((y - x) ** 2))
+        else:
+            aerr.append(jnp.zeros((), jnp.float32))
+
+    if entire_model:
+        # entire-model counterfactual: the flat gradient as ONE unit, with
+        # the legacy entire_model key derivation (fold_in(key, 0)).
+        em = (flat if flat is not None
+              else jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                                    for l in leaves])
+              if len(leaves) > 1
+              else leaves[0].reshape(-1).astype(jnp.float32))
+        q_em = qw.sim(em, jax.random.fold_in(key, 0))
+        em_sumsq = jnp.sum(em * em)
+        em_qw_sumsq = jnp.sum(q_em * q_em)
+        em_errsq = jnp.sum((q_em - em) ** 2)
+    else:
+        em_sumsq = em_qw_sumsq = em_errsq = jnp.zeros((), jnp.float32)
+    return TelemetryState(
+        steps=jnp.ones((), jnp.float32),
+        grad_sum=jnp.stack(gsum),
+        grad_sumsq=jnp.stack(gsq),
+        qw_sumsq=jnp.stack(qsq),
+        qw_errsq=jnp.stack(qerr),
+        agg_errsq=jnp.stack(aerr),
+        em_sumsq=em_sumsq,
+        em_qw_sumsq=em_qw_sumsq,
+        em_errsq=em_errsq,
+    )
+
+
+def payload_bits_per_step(mplan: UnitPlan, qw: Compressor) -> int:
+    """Static uplink payload bits per step, summed bucket-by-bucket
+    (n_units × per-unit payload). Deliberately a different summation
+    order than bits.comm_report's per-unit walk — the tests assert the
+    two agree."""
+    total = 0
+    for b in mplan.buckets:
+        total += b.n * qw.payload_bits(b.dim)
+    return total
+
+
+def summarize(state: TelemetryState, mplan: UnitPlan,
+              qw: Optional[Compressor] = None) -> Dict:
+    """Host-side window summary: plain Python floats, JSON-exportable.
+
+    Per bucket: mean-per-step gradient energy, entry variance, empirical
+    Ω̂ (= E‖Q(x)‖²/‖x‖² − 1), relative compression error, end-to-end
+    relative aggregation error, and (when `qw` is given) the static
+    payload bits the active compressor puts on the wire per step.
+    """
+    steps = float(state.steps)
+    out: Dict = {"steps": steps, "buckets": [], "entire_model": {}}
+    if steps == 0:
+        return out
+    gsum = [float(v) for v in state.grad_sum]
+    gsq = [float(v) for v in state.grad_sumsq]
+    qsq = [float(v) for v in state.qw_sumsq]
+    qerr = [float(v) for v in state.qw_errsq]
+    aerr = [float(v) for v in state.agg_errsq]
+    total_payload = 0
+    for i, b in enumerate(mplan.buckets):
+        n_elems = steps * b.n * b.dim
+        mean = gsum[i] / n_elems
+        var = max(0.0, gsq[i] / n_elems - mean * mean)
+        entry = {
+            "dim": b.dim,
+            "n_units": b.n,
+            "grad_norm_sq": gsq[i] / steps,
+            "grad_var": var,
+            "omega_hat": qsq[i] / (gsq[i] + _EPS) - 1.0,
+            "rel_err": qerr[i] / (gsq[i] + _EPS),
+            "agg_rel_err": aerr[i] / (gsq[i] + _EPS),
+        }
+        if qw is not None:
+            entry["payload_bits"] = b.n * qw.payload_bits(b.dim)
+            total_payload += entry["payload_bits"]
+        out["buckets"].append(entry)
+    if qw is not None:
+        out["payload_bits_per_step"] = total_payload
+    em_sq = float(state.em_sumsq)
+    if em_sq > 0.0:  # counterfactual leg was measured (entire_model=True)
+        out["entire_model"] = {
+            "dim": mplan.total,
+            "grad_norm_sq": em_sq / steps,
+            "omega_hat": float(state.em_qw_sumsq) / (em_sq + _EPS) - 1.0,
+            "rel_err": float(state.em_errsq) / (em_sq + _EPS),
+        }
+    return out
+
+
+def unit_omegas(summary: Dict, mplan: UnitPlan,
+                metric: str = "rel_err") -> List[float]:
+    """Expand a window summary's per-bucket statistic to one value per
+    accounting unit, in the plan's unit order (feeds the measured-omega
+    form of theory.noise_bounds_from_plan)."""
+    per_unit = [0.0] * mplan.num_exec_units
+    for entry, b in zip(summary["buckets"], mplan.buckets):
+        for uid in b.unit_ids:
+            per_unit[uid] = float(entry[metric])
+    return per_unit
+
+
+def to_json(payload: Dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)

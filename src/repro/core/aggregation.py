@@ -179,28 +179,48 @@ def _unit_shared_random(cfg: CompressionConfig, axis_names):
 # public API
 # --------------------------------------------------------------------------
 
+def _telemetry_inc(telemetry_plan, cfg, grads, agg, key, entire_model):
+    """One-step telemetry increment measured on this aggregation call
+    (lazy import: control depends on core, never the reverse)."""
+    from repro.control.telemetry import measure
+    return measure(telemetry_plan, cfg.qw, grads, key, grads_hat=agg,
+                   entire_model=entire_model)
+
+
 def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                          axis_names: Sequence[str], key: Array,
                          n_workers: int,
                          ef_state=None,
-                         plan: Optional[UnitPlan] = None):
+                         plan: Optional[UnitPlan] = None,
+                         telemetry_plan: Optional[UnitPlan] = None,
+                         telemetry_entire_model: bool = True):
     """Aggregate data-parallel gradients with bidirectional compression.
 
-    Must be called inside shard_map. Returns (grads_hat, new_ef_state).
-    `n_workers` is the static product of the DP axis sizes. Pass `plan`
-    (a UnitPlan built once at trace time, e.g. by the engine) to skip
-    re-deriving the unit partition; otherwise the cached plan for
-    (grads structure, granularity) is fetched.
+    Must be called inside shard_map. Returns (grads_hat, new_ef_state) —
+    or (grads_hat, new_ef_state, telemetry_inc) when `telemetry_plan` is
+    given: a control.telemetry.TelemetryState increment measured on the
+    device-local gradient vs the aggregated output (the caller pmean-s it
+    across devices). `n_workers` is the static product of the DP axis
+    sizes. Pass `plan` (a UnitPlan built once at trace time, e.g. by the
+    engine) to skip re-deriving the unit partition; otherwise the cached
+    plan for (grads structure, granularity) is fetched.
     """
     axis_names = tuple(axis_names)
+
+    def ret(agg, ef):
+        if telemetry_plan is None:
+            return agg, ef
+        return agg, ef, _telemetry_inc(telemetry_plan, cfg, grads, agg, key,
+                                       telemetry_entire_model)
+
     if cfg.strategy == "dense":
         agg = jax.tree_util.tree_map(
             lambda g: _mean_psum(_wire(g, cfg), axis_names).astype(g.dtype),
             grads)
-        return agg, ef_state
+        return ret(agg, ef_state)
 
     if not jax.tree_util.tree_leaves(grads):  # nothing to aggregate
-        return grads, ef_state
+        return ret(grads, ef_state)
 
     if plan is None:
         plan = build_plan(grads, stacked, cfg.granularity)
@@ -211,7 +231,8 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         fn = (_unit_simulated_ef(cfg, axis_names)
               if cfg.strategy == "simulated"
               else _unit_allgather_ef(cfg, axis_names))
-        return plan.execute_with_state(fn, grads, ef_state, key)
+        agg, ef = plan.execute_with_state(fn, grads, ef_state, key)
+        return ret(agg, ef)
 
     if cfg.strategy == "simulated":
         fn = _unit_simulated(cfg, axis_names)
@@ -223,19 +244,23 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         fn = _unit_shared_random(cfg, axis_names)
     else:  # pragma: no cover
         raise ValueError(cfg.strategy)
-    return plan.execute(fn, grads, key), ef_state
+    return ret(plan.execute(fn, grads, key), ef_state)
 
 
 def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
                                 key: Array, ef_state=None,
-                                plan: Optional[UnitPlan] = None):
+                                plan: Optional[UnitPlan] = None,
+                                telemetry_plan: Optional[UnitPlan] = None,
+                                telemetry_entire_model: bool = True):
     """Single-device realization of Algorithm 1 for the paper-repro
     experiments: `worker_grads` leaves carry a leading worker axis n.
 
     Mathematically identical to compressed_allreduce(strategy='simulated')
     on an n-way mesh; runs on one CPU device. One UnitPlan (built from the
     per-worker tree, i.e. without the worker axis) serves both the worker
-    and master compression passes.
+    and master compression passes. With `telemetry_plan` the return value
+    grows a third element: a TelemetryState increment measured on the
+    mean worker gradient vs the aggregated output.
     """
     n = jax.tree_util.tree_leaves(worker_grads)[0].shape[0]
     if plan is None:
@@ -274,4 +299,9 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
     def master_fn(x, ukey):
         return cfg.qm.sim(x, _master_key(ukey))
     out = plan.execute(master_fn, mean, key)
-    return out, new_ef
+    if telemetry_plan is None:
+        return out, new_ef
+    gbar = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0),
+                                  worker_grads)
+    return out, new_ef, _telemetry_inc(telemetry_plan, cfg, gbar, out, key,
+                                       telemetry_entire_model)

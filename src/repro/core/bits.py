@@ -36,11 +36,18 @@ def comm_report(cfg: CompressionConfig,
                 n_workers: int) -> CommReport:
     """Wire cost of one aggregation step.
 
+    `cfg` is a CompressionConfig, or a control.policy.CompressionDecision
+    (anything with `.to_config()`): a decision materializes its per-bucket
+    ratio overrides as a per-dim compressor, so the reported bits track
+    the ACTIVE per-bucket ratios rather than one global config.
+
     `unit_dims` is either the static per-unit dimension list or a UnitPlan
     (whose accounting dims are used — the canonical source once the engine
     has built its plan). Ring-allreduce reference: each worker
     sends+receives ~2·d elements.
     """
+    if hasattr(cfg, "to_config"):  # CompressionDecision (duck-typed: no
+        cfg = cfg.to_config()      # core -> control import)
     if isinstance(unit_dims, UnitPlan):
         unit_dims = list(unit_dims.unit_dims)
     d_total = sum(unit_dims)

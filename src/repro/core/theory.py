@@ -79,24 +79,48 @@ def layerwise_tighter(omegas_w, omegas_m, dims) -> bool:
         omegas_w, omegas_m, dims) + 1e-9
 
 
-def noise_bounds_from_plan(plan, comp_w: Compressor,
-                           comp_m: Optional[Compressor] = None
+def noise_bounds_from_plan(plan, comp_w: Optional[Compressor] = None,
+                           comp_m: Optional[Compressor] = None, *,
+                           measured_w: Optional[Sequence[float]] = None,
+                           measured_m: Optional[Sequence[float]] = None
                            ) -> Tuple[float, float]:
-    """(Trace(A), entire-model bound) for a UnitPlan's unit partition,
-    using the operators' closed-form Ω per unit dimension.
+    """(Trace(A), entire-model bound) for a UnitPlan's unit partition.
+
+    Per-unit omegas come from the operators' closed forms, or — the
+    adaptive-control path — from `measured_w` / `measured_m`: per-unit
+    empirical estimates in plan unit order (control.telemetry's
+    `unit_omegas`), which is how GranularitySwitchPolicy evaluates the
+    paper's bound on live statistics instead of worst cases.
 
     The plan's accounting dims are the d_j of the paper's §4; this is the
     wire-level counterpart of comm_report reading plan.unit_dims. Raises
-    if an operator has no closed-form Ω (use empirical_omega instead).
+    if an operator has no closed-form Ω and no measurement is supplied.
     """
     dims = list(plan.unit_dims)
-    ow = [comp_w.omega(d) for d in dims]
-    om = ([comp_m.omega(d) for d in dims] if comp_m is not None
-          else [0.0] * len(dims))
-    if any(o is None for o in ow + om):
-        raise ValueError(
-            "operator has no closed-form Omega; measure empirical_omega "
-            "per unit instead")
+
+    def resolve(measured, comp, tag):
+        if measured is not None:
+            om = [float(o) for o in measured]
+            if len(om) != len(dims):
+                raise ValueError(
+                    f"measured_{tag} has {len(om)} omegas, plan has "
+                    f"{len(dims)} units")
+            return om
+        if comp is None:
+            if tag == "w":  # no source for the worker omegas: fail loudly
+                raise ValueError(
+                    "provide comp_w or measured_w (a zero-noise worker "
+                    "bound is never what you want)")
+            return [0.0] * len(dims)
+        om = [comp.omega(d) for d in dims]
+        if any(o is None for o in om):
+            raise ValueError(
+                "operator has no closed-form Omega; measure empirical_omega "
+                "per unit instead")
+        return om
+
+    ow = resolve(measured_w, comp_w, "w")
+    om = resolve(measured_m, comp_m, "m")
     return (trace_A(ow, om, dims), entire_model_bound(ow, om, dims))
 
 

@@ -183,6 +183,23 @@ class Engine:
                 shape[i] //= f
         return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
 
+    def _local_param_sds(self):
+        """Per-device shard ShapeDtypeStructs of the full parameter tree
+        (the gradient shapes the train step sees inside shard_map)."""
+        return jax.tree_util.tree_map(self._local_sds,
+                                      self.model.param_shapes(),
+                                      self.model.param_pspecs())
+
+    def measurement_plan(self):
+        """The layer-wise UnitPlan telemetry is measured over (the full
+        local gradient tree, independent of the active execution
+        granularity — so a controller's TelemetryState keeps its shape
+        across decisions). Cached: the same object the traced step uses.
+        """
+        from repro.control.telemetry import measurement_plan
+        return measurement_plan(self._local_param_sds(),
+                                self.model.stacked())
+
     def comm_plans(self):
         """(rest_plan, fsdp_plan): the static UnitPlans the train step
         executes compression through.
@@ -198,9 +215,7 @@ class Engine:
         comp = self.comp or CompressionConfig(strategy="dense")
         stacked = self.model.stacked()
         fsdp_mask = self.model.fsdp_mask()
-        shapes = jax.tree_util.tree_map(self._local_sds,
-                                        self.model.param_shapes(),
-                                        self.model.param_pspecs())
+        shapes = self._local_param_sds()
         g_fsdp, g_rest = _partition(shapes, fsdp_mask)
         s_fsdp, s_rest = _partition(stacked, fsdp_mask)
         rest_plan = (build_plan(g_rest, s_rest, comp.granularity)
@@ -211,11 +226,13 @@ class Engine:
                      else None)
         return rest_plan, fsdp_plan
 
-    def _aggregate_grads(self, grads, key):
+    def _aggregate_grads(self, grads, key,
+                         comp: Optional[CompressionConfig] = None):
         """Paper's Algorithm 1 over the DP axes, executed through the
         static UnitPlans (one batched compressor dispatch per unit size
         class — built once at jit-trace time, cached thereafter)."""
-        model, dist, comp = self.model, self.dist, self.comp
+        model, dist = self.model, self.dist
+        comp = comp if comp is not None else self.comp
         stacked = model.stacked()
         fsdp_mask = model.fsdp_mask()
         g_fsdp, g_rest = _partition(grads, fsdp_mask)
@@ -245,16 +262,41 @@ class Engine:
             g_fsdp = fsdp_plan.execute(master, g_fsdp, mkey)
         return _merge(g_fsdp, agg_rest)
 
-    def build_train_step(self, lr_schedule=None):
+    def build_train_step(self, lr_schedule=None, *,
+                         comp: Optional[CompressionConfig] = None,
+                         telemetry: bool = False,
+                         telemetry_entire_model: bool = True):
+        """The sharded, jitted train step.
+
+        `comp` overrides the engine's CompressionConfig for THIS step
+        (the controller's decision → step path; `None` keeps engine
+        default — identical graph to the pre-controller behavior). With
+        `telemetry=True` the step takes and returns a
+        control.telemetry.TelemetryState as an extra (replicated)
+        argument: (params, opt, batch, step, telem) -> (params, opt,
+        metrics, telem'), where telem' accumulates this step's
+        measurement pmean'd over ALL devices. Semantics of that mean:
+        each device measures its LOCAL shard, so absolute second moments
+        are per-device-shard averages, not global sums — ratio statistics
+        (omega_hat, rel_err — all any policy consumes) are exact, since
+        the uniform 1/n_devices factor cancels.
+        `telemetry_entire_model=False` drops the flat counterfactual
+        compression pass (only GranularitySwitchPolicy reads it).
+        """
         model, cfg, opt = self.model, self.cfg, self.opt
         dist = self.dist
+        comp_eff = comp if comp is not None else self.comp
         sched = lr_schedule or (lambda s: jnp.float32(self.opt.lr))
+        if telemetry:
+            from repro.control.telemetry import accumulate, measure
+            mplan = self.measurement_plan()
+            all_axes = tuple(self.mesh.axis_names)
 
         mb = max(1, cfg.train_microbatch)
 
-        def step_fn(params, opt_state, batch, step):
+        def step_fn(params, opt_state, batch, step, telem=None):
             key = jax.random.fold_in(jax.random.key(42), step)
-            comp_hook = self.comp if dist.fsdp is not None else None
+            comp_hook = comp_eff if dist.fsdp is not None else None
 
             def loss_fn(p, b):
                 return model.loss(p, b, key, comp=comp_hook,
@@ -285,12 +327,22 @@ class Engine:
                 grads = jax.tree_util.tree_map(
                     lambda g: (g * jnp.asarray(inv, g.dtype)), grads)
                 loss = lsum * inv
-            grads = self._aggregate_grads(grads, key)
+            agg = self._aggregate_grads(grads, key, comp_eff)
+            if telemetry:
+                qw = (comp_eff or CompressionConfig(strategy="dense")).qw
+                inc = measure(mplan, qw, grads, key, grads_hat=agg,
+                              entire_model=telemetry_entire_model)
+                inc = jax.tree_util.tree_map(
+                    lambda v: jax.lax.pmean(v, all_axes), inc)
+                telem = accumulate(telem, inc)
             lr = sched(step)
-            params, opt_state = apply_updates(opt, params, grads, opt_state,
+            params, opt_state = apply_updates(opt, params, agg, opt_state,
                                               lr)
             loss = jax.lax.pmean(loss, dist.dp)
-            return params, opt_state, {"loss": loss, "lr": lr}
+            metrics = {"loss": loss, "lr": lr}
+            if telemetry:
+                return params, opt_state, metrics, telem
+            return params, opt_state, metrics
 
         pp = self.model.param_pspecs()
         ops = self._opt_pspecs()
@@ -298,10 +350,17 @@ class Engine:
         # multiple of the dp degree for every assigned train shape)
         bs = self.batch_pspecs(
             InputShape("train", 1, self.dp_size, "train"))
-        mapped = shard_map(
-            step_fn, self.mesh,
-            in_specs=(pp, ops, bs, P()),
-            out_specs=(pp, ops, {"loss": P(), "lr": P()}))
+        metrics_spec = {"loss": P(), "lr": P()}
+        if telemetry:
+            mapped = shard_map(
+                step_fn, self.mesh,
+                in_specs=(pp, ops, bs, P(), P()),
+                out_specs=(pp, ops, metrics_spec, P()))
+        else:
+            mapped = shard_map(
+                step_fn, self.mesh,
+                in_specs=(pp, ops, bs, P()),
+                out_specs=(pp, ops, metrics_spec))
         return jax.jit(mapped, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------

@@ -18,12 +18,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ARCH_NAMES, get_config, get_smoke
+from repro.control import POLICIES, engine_controller, make_policy
 from repro.core import CompressionConfig, Granularity, make_compressor
 from repro.data import lm_batches, frames_stub, patches_stub
 from repro.launch.engine import Engine
 from repro.launch.mesh import make_host_mesh
 from repro.ckpt import save_checkpoint
 from repro.optim import OptConfig, piecewise_linear
+
+
+def build_controller(args, eng, sched):
+    kw = {}
+    if args.policy == "variance_budget":
+        kw["budget"] = args.variance_budget
+    if args.policy == "bit_budget":
+        kw["bits_per_step"] = args.bit_budget
+    policy = make_policy(args.policy, **kw)
+    collect = policy.needs_telemetry or bool(args.telemetry_out)
+    return engine_controller(eng, policy, lr_schedule=sched,
+                             replan_every=args.replan_every,
+                             collect_telemetry=collect)
 
 
 def build_compression(args) -> CompressionConfig:
@@ -61,6 +75,21 @@ def main(argv=None):
     ap.add_argument("--block-size", type=int, default=65536)
     ap.add_argument("--strategy", default="simulated")
     ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--policy", default=None, choices=list(POLICIES),
+                    help="adaptive compression policy; routes the run "
+                         "through the control.Controller (default: the "
+                         "static engine path without telemetry)")
+    ap.add_argument("--replan-every", type=int, default=20,
+                    help="policy re-plan boundary, in steps")
+    ap.add_argument("--telemetry-out", default="",
+                    help="write the controller's per-window telemetry "
+                         "summaries + switch log as JSON (implies "
+                         "--policy static when no policy is given)")
+    ap.add_argument("--variance-budget", type=float, default=0.1,
+                    help="variance_budget policy: max relative "
+                         "compression error per bucket")
+    ap.add_argument("--bit-budget", type=int, default=1 << 22,
+                    help="bit_budget policy: uplink payload bits/step")
     ap.add_argument("--optimizer", default="momentum")
     ap.add_argument("--lr", type=float, default=0.2)
     ap.add_argument("--nesterov", action="store_true")
@@ -68,6 +97,8 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.telemetry_out and not args.policy:
+        args.policy = "static"  # telemetry collection needs the controller
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh(data=args.data, model=args.model)
@@ -75,11 +106,14 @@ def main(argv=None):
     opt = OptConfig(name=args.optimizer, lr=args.lr, nesterov=args.nesterov)
     eng = Engine(cfg, mesh, comp=comp, opt=opt)
     sched = piecewise_linear(args.lr, args.steps, max(1, args.steps // 10))
-    step_fn = eng.build_train_step(sched)
+    ctrl = build_controller(args, eng, sched) if args.policy else None
+    step_fn = None if ctrl else eng.build_train_step(sched)
     params, opt_state = eng.init_state(args.seed)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} params={n/1e6:.2f}M mesh={dict(eng.sizes)} "
-          f"comp={comp.strategy}/{comp.qw.name}/{comp.granularity.kind}")
+          f"comp={comp.strategy}/{comp.qw.name}/{comp.granularity.kind}"
+          + (f" policy={args.policy}/replan={args.replan_every}"
+             if ctrl else ""))
     # the static compression-execution plan the jitted step will run with
     # (same cached object: built here from ShapeDtypeStructs, reused at
     # trace time by Engine._aggregate_grads)
@@ -102,8 +136,22 @@ def main(argv=None):
                 batch["frames"] = frames_stub(
                     jax.random.fold_in(key, i), args.batch,
                     cfg.frontend_seq, cfg.d_model)
-            params, opt_state, m = step_fn(params, opt_state, batch,
-                                           jnp.int32(i))
+            if ctrl is not None:
+                fn = ctrl.step_fn()
+                if ctrl.collect:
+                    params, opt_state, m, telem = fn(
+                        params, opt_state, batch, jnp.int32(i),
+                        ctrl.telemetry)
+                else:
+                    params, opt_state, m = fn(params, opt_state, batch,
+                                              jnp.int32(i))
+                    telem = None
+                if ctrl.observe(telem, i):
+                    print(f"step {i:5d} replan -> "
+                          f"{ctrl.decision.describe()}")
+            else:
+                params, opt_state, m = step_fn(params, opt_state, batch,
+                                               jnp.int32(i))
             if i % max(1, args.steps // 20) == 0 or i == args.steps - 1:
                 print(f"step {i:5d} loss {float(m['loss']):.4f} "
                       f"lr {float(m['lr']):.4f} "
@@ -112,6 +160,12 @@ def main(argv=None):
                     (i + 1) % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt_dir, i + 1,
                                 {"params": params, "opt": opt_state})
+    if ctrl is not None:
+        print(f"controller: decision={ctrl.decision.describe()} "
+              f"builds={ctrl.builds} switches={len(ctrl.switches)}")
+        if args.telemetry_out:
+            ctrl.export(args.telemetry_out)
+            print(f"telemetry -> {args.telemetry_out}")
     return 0
 
 

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs.registry import ARCH_NAMES, get_smoke
 from repro.data import frames_stub, patches_stub
 from repro.models import DistConfig, Model

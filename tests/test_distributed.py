@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.timeout(1200)
 def test_distributed_checks():

@@ -11,6 +11,8 @@ from repro.core import (CompressionConfig, Granularity, Identity,
 from repro.data import lm_batches
 from repro.models import DistConfig, Model, ModelConfig
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.key(0)
 
 
