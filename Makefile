@@ -7,10 +7,12 @@ verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 
 # Tier-1 minus the long-running suites (distributed subprocess, system
-# end-to-end, per-arch smoke) — the inner-loop command. Full `make verify`
+# end-to-end, per-arch smoke) and the full comm-schedule equivalence
+# sweep (`sched` marker — tests/test_schedule.py keeps an unmarked smoke
+# subset in the inner loop) — the inner-loop command. Full `make verify`
 # before shipping.
 verify-fast:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched"
 
 # Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan
 # dispatches, adaptive controller). Writes BENCH_unitplan.json and
@@ -35,4 +37,12 @@ bench-controller:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
 	  "from benchmarks.microbench import controller; controller()"
 
-.PHONY: verify verify-fast bench bench-guard bench-unitplan bench-controller
+# Just the comm-schedule benchmark (message fusion counts + modeled
+# exposed comm) -> BENCH_schedule.json. Same clean-tree guard as `bench`:
+# committed BENCH files must be attributable to a commit.
+bench-schedule: bench-guard
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
+	  "from benchmarks.microbench import schedule; schedule()"
+
+.PHONY: verify verify-fast bench bench-guard bench-unitplan \
+	bench-controller bench-schedule

@@ -164,6 +164,71 @@ def unitplan(out_path: str = None):
 
 
 # --------------------------------------------------------------------------
+# comm-schedule benchmark: message fusion counts + modeled exposed comm
+# --------------------------------------------------------------------------
+
+def schedule(out_path: str = None):
+    """BENCH_schedule.json: wire-message counts and the alpha-beta model's
+    exposed-vs-overlapped comm picture for the resnet9 and phi4-mini
+    gradient trees, per fusion threshold (0 = one message per size-class
+    bucket, 1/4 MiB Horovod-style buffers, inf = one fused message),
+    plus the wall clock of the scheduled vs unscheduled jitted execution.
+
+    The stable signals are the COUNTS (messages vs dispatches vs units)
+    and the deterministic model numbers; the `*_us` wall clocks are
+    single-container noise — see CHANGES.md's benchmarking conventions.
+    The acceptance property asserted here: fusing strictly reduces the
+    resnet9 message count below its per-bucket dispatch count."""
+    from math import inf
+    from repro.core import build_schedule, simulate_schedule
+
+    gran = Granularity("layerwise")
+    comp = make_compressor("qsgd", levels=16)
+    cfg_kw = dict(alpha_us=50.0, gbps=12.5, compress_gbps=25.0)
+    thresholds = [("per_bucket", 0.0), ("fused_64kib", float(1 << 16)),
+                  ("fused_1mib", float(1 << 20)), ("one_shot", inf)]
+    report = {}
+    for name, tree, sm in _grad_trees():
+        plan = build_plan(tree, sm, gran)
+        entry = {"num_leaves": len(jax.tree_util.tree_leaves(tree)),
+                 "num_units": plan.num_units,
+                 "num_dispatches": plan.num_dispatches}
+        fn = lambda x, k: comp.sim(x, k)  # noqa: E731
+        plan_jit = jax.jit(lambda t, k: plan.execute(fn, t, k))
+        entry["plan_us"] = round(_time_median(plan_jit, tree, KEY), 1)
+        for label, fb in thresholds:
+            sched = build_schedule(plan, fb)
+            sim = simulate_schedule(sched, qw=comp, **cfg_kw)
+            sched_jit = jax.jit(lambda t, k: sched.execute(fn, t, k))
+            us = _time_median(sched_jit, tree, KEY)
+            entry[label] = {
+                "n_messages": sched.num_messages,
+                "exposed_comm_us_model": sim["exposed_comm_us"],
+                "comm_us_total_model": sim["comm_us_total"],
+                "overlap_frac_model": sim["overlap_frac"],
+                "wire_bits": sim["wire_bits_total"],
+                "sched_us": round(us, 1),
+            }
+            csv_line(f"schedule_{name}_{label}", us,
+                     f"messages={sched.num_messages} "
+                     f"exposed_model={sim['exposed_comm_us']}us")
+        # acceptance: fusion strictly reduces resnet9's message count
+        # below the per-bucket dispatch count
+        if name == "resnet9":
+            assert (entry["fused_64kib"]["n_messages"]
+                    < entry["num_dispatches"]), entry
+            assert (entry["fused_1mib"]["n_messages"]
+                    < entry["num_dispatches"]), entry
+        assert entry["per_bucket"]["n_messages"] == entry["num_dispatches"]
+        assert entry["one_shot"]["n_messages"] == 1
+        report[name] = entry
+    path = out_path or os.path.join(_REPO_ROOT, "BENCH_schedule.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
+# --------------------------------------------------------------------------
 # adaptive-controller benchmark: telemetry overhead + replan/retrace cost
 # --------------------------------------------------------------------------
 
@@ -254,4 +319,5 @@ def run():
     operators()
     kernels()
     unitplan()
+    schedule()
     controller()

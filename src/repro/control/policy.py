@@ -22,17 +22,23 @@ never retraces twice.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 from repro.core.aggregation import CompressionConfig
 from repro.core.compressors import Compressor, Identity
 from repro.core.granularity import Granularity
 from repro.core.plan import UnitPlan
+from repro.core.schedule import build_schedule, simulate_schedule
 from repro.core import theory
 
 from repro.control.telemetry import unit_omegas
 
 RATIO_LADDER = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0)
+
+#: fusion_bytes candidates FusionPolicy picks from: per-bucket messages,
+#: Horovod-ish small/medium/large fusion buffers, one fused message.
+FUSION_LADDER = (0.0, 4096.0, 65536.0, float(1 << 20), math.inf)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +85,11 @@ class PerDimRatio(Compressor):
 class CompressionDecision:
     """A policy's output: everything needed to materialize a
     CompressionConfig (and therefore a UnitPlan + jitted step). Frozen +
-    tuple fields => hashable, the controller's cache key."""
+    tuple fields => hashable, the controller's cache key. `fusion_bytes`
+    (None = unscheduled; a float incl. math.inf = stream through the
+    CommSchedule fused at that threshold) is an ordinary hashable field,
+    so decisions carrying a schedule keep the never-retrace guarantee:
+    revisiting a (.., fusion_bytes) combination hits the step cache."""
 
     granularity: Granularity = Granularity("layerwise")
     qw: Compressor = Identity()
@@ -88,6 +98,7 @@ class CompressionDecision:
     error_feedback: bool = False
     wire_dtype: str = "float32"
     ratio_overrides: Tuple[Tuple[int, float], ...] = ()  # unit dim -> ratio
+    fusion_bytes: Optional[float] = None  # comm schedule fusion threshold
 
     def compressor_for_dim(self, d: int) -> Compressor:
         for dim, r in self.ratio_overrides:
@@ -106,7 +117,7 @@ class CompressionDecision:
         return CompressionConfig(
             qw=qw, qm=self.qm, granularity=self.granularity,
             strategy=self.strategy, error_feedback=self.error_feedback,
-            wire_dtype=self.wire_dtype)
+            wire_dtype=self.wire_dtype, fusion_bytes=self.fusion_bytes)
 
     @classmethod
     def from_config(cls, cfg: CompressionConfig) -> "CompressionDecision":
@@ -115,7 +126,8 @@ class CompressionDecision:
             qw, overrides = qw.base, qw.table
         return cls(granularity=cfg.granularity, qw=qw, qm=cfg.qm,
                    strategy=cfg.strategy, error_feedback=cfg.error_feedback,
-                   wire_dtype=cfg.wire_dtype, ratio_overrides=overrides)
+                   wire_dtype=cfg.wire_dtype, ratio_overrides=overrides,
+                   fusion_bytes=cfg.fusion_bytes)
 
     def payload_bits(self, unit_dims: Sequence[int]) -> int:
         """Uplink payload bits/step under this decision's per-dim ratios."""
@@ -125,8 +137,12 @@ class CompressionDecision:
     def describe(self) -> str:
         ov = (f" overrides={len(self.ratio_overrides)}"
               if self.ratio_overrides else "")
+        fb = ""
+        if self.fusion_bytes is not None:
+            fb = (" fuse=inf" if math.isinf(self.fusion_bytes)
+                  else f" fuse={int(self.fusion_bytes)}B")
         return (f"{self.granularity.kind}/{self.qw.name}"
-                f"/{self.strategy}{ov}")
+                f"/{self.strategy}{ov}{fb}")
 
 
 @runtime_checkable
@@ -296,15 +312,70 @@ class BitBudgetPolicy:
         return dataclasses.replace(current, ratio_overrides=overrides)
 
 
-POLICIES = ("static", "variance_budget", "granularity_switch", "bit_budget")
+@dataclasses.dataclass(frozen=True)
+class FusionPolicy:
+    """Pick the comm-schedule fusion threshold from telemetry: for each
+    candidate `fusion_bytes` in the ladder, price the window's measured
+    per-bucket payload bits through the deterministic alpha-beta pipeline
+    model (core.schedule.simulate_schedule) and choose the threshold with
+    the smallest modeled step-completion time. High link alpha pushes
+    toward one fused message (pay latency once); alpha ~ 0 pushes toward
+    per-bucket messages (start streaming the moment backward produces a
+    bucket). Ties break toward the earlier ladder entry (less fusion).
+
+    Only the fusion_bytes field of the decision ever changes, and the
+    ladder is finite — so the controller's decision -> compiled-step
+    cache sees a small closed set of keys and revisiting a threshold
+    never retraces (the builds-counter test).
+
+    Modeled on the layer-wise measurement plan; non-layerwise decisions
+    pass through unchanged (entire-model / blockwise plans are a single
+    wire unit — there is nothing to fuse).
+    """
+
+    alpha_us: float = 50.0
+    gbps: float = 12.5            # link bandwidth, GB/s (100 Gb/s)
+    compress_gbps: float = 25.0   # compression-stream throughput, GB/s
+    ladder: Tuple[float, ...] = FUSION_LADDER
+    name: str = "fusion"
+    needs_telemetry: bool = True
+    needs_entire_model: bool = False
+
+    def decide(self, summary, current, mplan=None):
+        if mplan is None or current.granularity.kind != "layerwise":
+            return current
+        buckets = summary.get("buckets") or []
+        bucket_bits = None
+        if len(buckets) == len(mplan.buckets) and all(
+                "payload_bits" in e for e in buckets):
+            bucket_bits = [e["payload_bits"] for e in buckets]
+        else:  # no measured window: static bits from the active decision
+            qw = current.to_config().qw
+            bucket_bits = [b.n * qw.payload_bits(b.dim)
+                           for b in mplan.buckets]
+        best, best_t = None, None
+        for fb in self.ladder:
+            sim = simulate_schedule(
+                build_schedule(mplan, fb), bucket_bits=bucket_bits,
+                alpha_us=self.alpha_us, gbps=self.gbps,
+                compress_gbps=self.compress_gbps)
+            if best_t is None or sim["t_total_us"] < best_t:
+                best, best_t = fb, sim["t_total_us"]
+        if best == current.fusion_bytes:
+            return current
+        return dataclasses.replace(current, fusion_bytes=best)
+
+
+POLICIES = ("static", "variance_budget", "granularity_switch", "bit_budget",
+            "fusion")
 
 
 def make_policy(name: str, **kw) -> Policy:
     """Build a policy by CLI name. kw are dataclass fields (budget=,
-    bits_per_step=, margin=, ladder=)."""
+    bits_per_step=, margin=, ladder=, alpha_us=)."""
     table = {"static": StaticPolicy, "variance_budget": VarianceBudgetPolicy,
              "granularity_switch": GranularitySwitchPolicy,
-             "bit_budget": BitBudgetPolicy}
+             "bit_budget": BitBudgetPolicy, "fusion": FusionPolicy}
     if name not in table:
         raise ValueError(f"unknown policy {name!r}; have {sorted(table)}")
     return table[name](**kw)

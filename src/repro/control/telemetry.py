@@ -81,12 +81,6 @@ def accumulate(state: TelemetryState, inc: TelemetryState) -> TelemetryState:
     return jax.tree_util.tree_map(jnp.add, state, inc)
 
 
-def _bucket_q(qw: Compressor, x: Array, keys: Array) -> Array:
-    if x.shape[0] == 1:
-        return qw.sim(x[0], keys[0])[None]
-    return jax.vmap(lambda v, k: qw.sim(v, k))(x, keys)
-
-
 def measure(mplan: UnitPlan, qw: Compressor, grads, key: Array,
             grads_hat=None, entire_model: bool = True) -> TelemetryState:
     """One-step telemetry increment for `grads` (and optionally the
@@ -110,8 +104,9 @@ def measure(mplan: UnitPlan, qw: Compressor, grads, key: Array,
     gsum, gsq, qsq, qerr, aerr = [], [], [], [], []
     for b in mplan.buckets:
         x = mplan._gather_runs(leaves, flat, b)
-        kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
-        q = _bucket_q(qw, x, kb)
+        # the plan's OWN dispatch (one copy of the key-indexing/vmap
+        # logic): the measured Q_W stream is the executed one
+        q = mplan._dispatch(lambda v, k: qw.sim(v, k), b, x, keys)
         gsum.append(jnp.sum(x))
         gsq.append(jnp.sum(x * x))
         qsq.append(jnp.sum(q * q))

@@ -10,6 +10,9 @@ from repro.core.granularity import (Granularity, stacked_mask, unit_dims,
                                     apply_unitwise_reference,
                                     apply_unitwise_with_state_reference)
 from repro.core.plan import UnitPlan, Bucket, build_plan, plan_unit_dims
+from repro.core.schedule import (CommSchedule, Message, FUSE_ALL,
+                                 build_schedule, message_wire_bits,
+                                 simulate_schedule)
 from repro.core.aggregation import (CompressionConfig, compressed_allreduce,
                                     aggregate_simulated_workers,
                                     no_compression, STRATEGIES)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from repro.core.compressors import Compressor, Identity, RandomK, make_compressor
 from repro.core.granularity import Granularity
 from repro.core.plan import UnitPlan, build_plan
+from repro.core.schedule import CommSchedule, build_schedule
 
 Array = jax.Array
 
@@ -46,13 +47,22 @@ STRATEGIES = ("dense", "simulated", "allgather", "rs_compress_ag",
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
-    """Static configuration of the compressed-communication stack."""
+    """Static configuration of the compressed-communication stack.
+
+    `fusion_bytes` turns on comm scheduling (core.schedule): None keeps
+    the unscheduled UnitPlan execution (identical graph to before the
+    schedule subsystem existed); a number routes execution through the
+    CommSchedule compiled from the active plan — backward-ready message
+    order, buckets fused below the threshold (0 = per-bucket messages,
+    math.inf = one message). Scheduling never changes numerics.
+    """
     qw: Compressor = Identity()
     qm: Compressor = Identity()
     granularity: Granularity = Granularity("layerwise")
     strategy: str = "simulated"
     error_feedback: bool = False
     wire_dtype: str = "float32"  # dense/rs wire format: float32 | bfloat16
+    fusion_bytes: Optional[float] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -61,6 +71,9 @@ class CompressionConfig:
             raise ValueError("shared_random requires a RandomK worker compressor")
         if self.error_feedback and self.strategy not in ("simulated", "allgather"):
             raise ValueError("error feedback supports simulated/allgather only")
+        if self.fusion_bytes is not None and not float(self.fusion_bytes) >= 0:
+            raise ValueError(
+                f"fusion_bytes must be >= 0 or None, got {self.fusion_bytes!r}")
 
 
 def no_compression() -> CompressionConfig:
@@ -187,11 +200,25 @@ def _telemetry_inc(telemetry_plan, cfg, grads, agg, key, entire_model):
                    entire_model=entire_model)
 
 
+def _executor(plan: UnitPlan, cfg: CompressionConfig,
+              schedule: Optional[CommSchedule]):
+    """What execution runs through: an explicit CommSchedule, the schedule
+    compiled from cfg.fusion_bytes, or the bare plan. All three share the
+    execute/execute_with_state signature and are bit-identical; scheduling
+    only changes program order and message accounting."""
+    if schedule is not None:
+        return schedule
+    if cfg.fusion_bytes is not None:
+        return build_schedule(plan, cfg.fusion_bytes)
+    return plan
+
+
 def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                          axis_names: Sequence[str], key: Array,
                          n_workers: int,
                          ef_state=None,
                          plan: Optional[UnitPlan] = None,
+                         schedule: Optional[CommSchedule] = None,
                          telemetry_plan: Optional[UnitPlan] = None,
                          telemetry_entire_model: bool = True):
     """Aggregate data-parallel gradients with bidirectional compression.
@@ -203,9 +230,13 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
     across devices). `n_workers` is the static product of the DP axis
     sizes. Pass `plan` (a UnitPlan built once at trace time, e.g. by the
     engine) to skip re-deriving the unit partition; otherwise the cached
-    plan for (grads structure, granularity) is fetched.
+    plan for (grads structure, granularity) is fetched. Pass `schedule`
+    (or set cfg.fusion_bytes) to stream execution through a CommSchedule
+    — same numerics, backward-ready fused message order.
     """
     axis_names = tuple(axis_names)
+    if plan is None and schedule is not None:
+        plan = schedule.plan
 
     def ret(agg, ef):
         if telemetry_plan is None:
@@ -224,6 +255,7 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
 
     if plan is None:
         plan = build_plan(grads, stacked, cfg.granularity)
+    ex = _executor(plan, cfg, schedule)
 
     if cfg.error_feedback:
         if ef_state is None:
@@ -231,7 +263,7 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         fn = (_unit_simulated_ef(cfg, axis_names)
               if cfg.strategy == "simulated"
               else _unit_allgather_ef(cfg, axis_names))
-        agg, ef = plan.execute_with_state(fn, grads, ef_state, key)
+        agg, ef = ex.execute_with_state(fn, grads, ef_state, key)
         return ret(agg, ef)
 
     if cfg.strategy == "simulated":
@@ -244,12 +276,13 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         fn = _unit_shared_random(cfg, axis_names)
     else:  # pragma: no cover
         raise ValueError(cfg.strategy)
-    return ret(plan.execute(fn, grads, key), ef_state)
+    return ret(ex.execute(fn, grads, key), ef_state)
 
 
 def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
                                 key: Array, ef_state=None,
                                 plan: Optional[UnitPlan] = None,
+                                schedule: Optional[CommSchedule] = None,
                                 telemetry_plan: Optional[UnitPlan] = None,
                                 telemetry_entire_model: bool = True):
     """Single-device realization of Algorithm 1 for the paper-repro
@@ -260,21 +293,27 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
     per-worker tree, i.e. without the worker axis) serves both the worker
     and master compression passes. With `telemetry_plan` the return value
     grows a third element: a TelemetryState increment measured on the
-    mean worker gradient vs the aggregated output.
+    mean worker gradient vs the aggregated output. `schedule` /
+    cfg.fusion_bytes stream the worker compression pass through a
+    CommSchedule (bit-identical; the vmap over workers batches the
+    ordering barriers).
     """
     n = jax.tree_util.tree_leaves(worker_grads)[0].shape[0]
+    if plan is None and schedule is not None:
+        plan = schedule.plan
     if plan is None:
         per_worker_tree = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
             worker_grads)
         plan = build_plan(per_worker_tree, stacked, cfg.granularity)
+    ex = _executor(plan, cfg, schedule)
 
     def per_worker(g_i, i):
         wkey = jax.random.fold_in(key, i)
 
         def fn(x, ukey):
             return cfg.qw.sim(x, ukey)
-        return plan.execute(fn, g_i, wkey)
+        return ex.execute(fn, g_i, wkey)
 
     if cfg.error_feedback:
         if ef_state is None:
@@ -285,8 +324,8 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
                 e = x + m
                 q = cfg.qw.sim(e, ukey)
                 return q, e - q
-            return plan.execute_with_state(fn, g_i, m_i,
-                                           jax.random.fold_in(key, i))
+            return ex.execute_with_state(fn, g_i, m_i,
+                                         jax.random.fold_in(key, i))
         compressed, new_ef = jax.vmap(per_worker_ef, in_axes=(0, 0, 0))(
             worker_grads, ef_state, jnp.arange(n))
     else:
@@ -298,7 +337,7 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
 
     def master_fn(x, ukey):
         return cfg.qm.sim(x, _master_key(ukey))
-    out = plan.execute(master_fn, mean, key)
+    out = ex.execute(master_fn, mean, key)
     if telemetry_plan is None:
         return out, new_ef
     gbar = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0),

@@ -3,15 +3,24 @@
 These are *analytic* wire sizes computed from static unit dimensions — the
 numbers a deployment would actually put on the ICI links. The dry-run
 roofline cross-checks them against the collective bytes parsed from HLO.
+
+Payload (beta) bits alone cannot distinguish entire-model from layer-wise
+from fused layer-wise communication: what separates them on real links is
+the PER-MESSAGE latency (alpha) term — one message for the entire model,
+one per unit for naive layer-wise, one per fusion buffer when scheduled.
+`comm_report` therefore also reports `n_messages` (the wire-transaction
+count) and, when `alpha_bits_per_message` is given, a latency line in
+bit-equivalents so the alpha and beta terms add in one unit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Union
+from typing import List, Optional, Sequence, Union
 
 from repro.core.aggregation import CompressionConfig
 from repro.core.compressors import Compressor
 from repro.core.plan import UnitPlan
+from repro.core.schedule import CommSchedule, build_schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,10 +30,22 @@ class CommReport:
     dense_bits: int              # uncompressed fp32 allreduce reference (per unit sum)
     uplink_bits_per_worker: int  # worker -> aggregation
     downlink_bits_per_worker: int  # aggregation -> worker
-    compression_ratio: float     # dense / (up+down)
+    compression_ratio: float     # dense / (up+down), payload only
+    n_messages: int = 0          # wire transactions per step (alpha count)
+    alpha_bits_per_message: int = 0  # per-message latency, bit-equivalents
 
     def total_bits_per_worker(self) -> int:
         return self.uplink_bits_per_worker + self.downlink_bits_per_worker
+
+    def latency_bits(self) -> int:
+        """The alpha term: n_messages x per-message latency cost."""
+        return self.n_messages * self.alpha_bits_per_message
+
+    def total_bits_with_latency(self) -> int:
+        """Payload (beta) + latency (alpha) in one number — the quantity
+        that actually orders entire-model vs layer-wise vs fused
+        layer-wise on a real link."""
+        return self.total_bits_per_worker() + self.latency_bits()
 
 
 def _wire_bits(cfg: CompressionConfig) -> int:
@@ -33,7 +54,9 @@ def _wire_bits(cfg: CompressionConfig) -> int:
 
 def comm_report(cfg: CompressionConfig,
                 unit_dims: Union[UnitPlan, Sequence[int]],
-                n_workers: int) -> CommReport:
+                n_workers: int,
+                schedule: Optional[CommSchedule] = None,
+                alpha_bits_per_message: int = 0) -> CommReport:
     """Wire cost of one aggregation step.
 
     `cfg` is a CompressionConfig, or a control.policy.CompressionDecision
@@ -45,13 +68,28 @@ def comm_report(cfg: CompressionConfig,
     (whose accounting dims are used — the canonical source once the engine
     has built its plan). Ring-allreduce reference: each worker
     sends+receives ~2·d elements.
+
+    Message accounting: without a schedule the wire sees one message per
+    unit (the unfused layer-wise reality the paper's timing discussion is
+    about; entire-model is the 1-unit special case). With `schedule` —
+    passed explicitly, or compiled automatically when `unit_dims` is a
+    UnitPlan and the config carries `fusion_bytes` — `n_messages` is the
+    fused message count. `alpha_bits_per_message` prices each message's
+    latency in bit-equivalents (link alpha x bandwidth); it feeds
+    `latency_bits()` / `total_bits_with_latency()` and never changes the
+    payload fields.
     """
     if hasattr(cfg, "to_config"):  # CompressionDecision (duck-typed: no
         cfg = cfg.to_config()      # core -> control import)
+    if (schedule is None and isinstance(unit_dims, UnitPlan)
+            and getattr(cfg, "fusion_bytes", None) is not None):
+        schedule = build_schedule(unit_dims, cfg.fusion_bytes)
     if isinstance(unit_dims, UnitPlan):
         unit_dims = list(unit_dims.unit_dims)
     d_total = sum(unit_dims)
     dense_bits = 2 * 32 * d_total
+    n_messages = (schedule.num_messages if schedule is not None
+                  else len(unit_dims))
 
     w = _wire_bits(cfg)
     if cfg.strategy == "dense":
@@ -78,4 +116,6 @@ def comm_report(cfg: CompressionConfig,
 
     total = up + down
     return CommReport(cfg.strategy, n_workers, dense_bits, up, down,
-                      dense_bits / max(1, total))
+                      dense_bits / max(1, total),
+                      n_messages=n_messages,
+                      alpha_bits_per_message=alpha_bits_per_message)

@@ -37,6 +37,7 @@ the operator zoo x granularities.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import functools
 from typing import Callable, List, Sequence, Tuple
@@ -62,11 +63,19 @@ class Bucket:
     directly — no flat staging buffer at all (the layerwise case, where
     units never straddle leaves). leaf_index == -1 (entire-model /
     blockwise spans) stages through the flat vector.
+
+    `ready` is the bucket's backward-readiness rank: backward produces
+    gradient leaves in reverse leaf order (leaf N-1 first, leaf 0 last),
+    so leaf k's gradient is available at time (n_leaves-1-k) and a bucket
+    is ready once EVERY leaf any of its units touches has been produced —
+    i.e. at (n_leaves-1) - min(touched leaf index). Lower rank = ready
+    earlier in backward. core.schedule orders wire messages by it.
     """
     dim: int
     unit_ids: Tuple[int, ...]
     offsets: Tuple[int, ...]
     runs: Tuple[Tuple[int, int, int], ...]
+    ready: int = 0
 
     @property
     def n(self) -> int:
@@ -75,6 +84,12 @@ class Bucket:
     @property
     def contiguous(self) -> bool:
         return len(self.runs) == 1
+
+    @property
+    def nbytes(self) -> int:
+        """Dense f32 bytes of the bucket's units — the size a Horovod-style
+        fusion buffer reasons about (compressor-independent)."""
+        return 4 * self.n * self.dim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +132,18 @@ class UnitPlan:
         """Batched compressor dispatches per execution — one per bucket,
         i.e. O(#size classes), not O(#leaves)."""
         return len(self.buckets)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.leaf_shapes)
+
+    def readiness_order(self) -> Tuple[int, ...]:
+        """Bucket indices sorted by backward-readiness (earliest-ready
+        first — i.e. the buckets whose gradients backward produces first,
+        the late layers). Ties break on bucket index, so the order is
+        deterministic and a pure function of the plan."""
+        return tuple(sorted(range(len(self.buckets)),
+                            key=lambda i: (self.buckets[i].ready, i)))
 
     def summary(self) -> str:
         bs = ", ".join(f"{b.n}x{b.dim}" for b in self.buckets)
@@ -215,6 +242,26 @@ class UnitPlan:
         return jax.tree_util.tree_unflatten(self.treedef, outs)
 
     # ---- execution --------------------------------------------------------
+    def _dispatch(self, fn, b: Bucket, x: Array, keys: Array) -> Array:
+        """ONE batched compressor dispatch for bucket `b` on its gathered
+        (n, dim) matrix. The single definition both the plan path and the
+        scheduled path (core.schedule) execute through — the scheduled-vs-
+        unscheduled bit-identity contract rests on there being one copy of
+        this key-indexing/vmap logic."""
+        kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
+        if b.n == 1:
+            return fn(x[0], kb[0])[None]
+        return jax.vmap(fn)(x, kb)
+
+    def _dispatch_with_state(self, fn, b: Bucket, x: Array, m: Array,
+                             keys: Array):
+        """State-threading twin of _dispatch: fn(x, m, key) -> (y, m')."""
+        kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
+        if b.n == 1:
+            y, mn = fn(x[0], m[0], kb[0])
+            return y[None], mn[None]
+        return jax.vmap(fn)(x, m, kb)
+
     def execute(self, fn: Callable[[Array, Array], Array], grads,
                 key: Array):
         """Map fn(x_flat f32[d], key) -> f32[d] over every unit, batched
@@ -230,11 +277,7 @@ class UnitPlan:
                     if flat is not None else None)
         for b in self.buckets:
             x = self._gather_runs(leaves, flat, b)
-            kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
-            if b.n == 1:
-                y = fn(x[0], kb[0])[None]
-            else:
-                y = jax.vmap(fn)(x, kb)
+            y = self._dispatch(fn, b, x, keys)
             out_flat = self._scatter_runs(out_leaves, out_flat, b, y)
         return self._assemble(out_leaves, out_flat)
 
@@ -256,12 +299,7 @@ class UnitPlan:
         for b in self.buckets:
             x = self._gather_runs(leaves, flat, b)
             m = self._gather_runs(sleaves, mflat, b)
-            kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
-            if b.n == 1:
-                y, mn = fn(x[0], m[0], kb[0])
-                y, mn = y[None], mn[None]
-            else:
-                y, mn = jax.vmap(fn)(x, m, kb)
+            y, mn = self._dispatch_with_state(fn, b, x, m, keys)
             out_flat = self._scatter_runs(out_leaves, out_flat, b, y)
             mout_flat = self._scatter_runs(mout_leaves, mout_flat, b, mn)
         return (self._assemble(out_leaves, out_flat),
@@ -272,6 +310,19 @@ class UnitPlan:
 # plan construction
 # ==========================================================================
 
+def _first_touched_leaf(offset: int, unit_leaf_idx: int,
+                        leaf_offsets: Sequence[int]) -> int:
+    """Lowest-index leaf a unit starting at `offset` touches. Units tagged
+    with a leaf use it directly; spanning units (entire-model / blockwise,
+    leaf index -1) locate the leaf containing their start offset. Offsets
+    landing in blockwise tail padding clamp to the last leaf."""
+    if unit_leaf_idx >= 0:
+        return unit_leaf_idx
+    if not leaf_offsets:
+        return 0
+    return max(0, bisect.bisect_right(leaf_offsets, offset) - 1)
+
+
 def _make_buckets(dims: Sequence[int], offsets: Sequence[int],
                   unit_leaf: Sequence[int],
                   leaf_offsets: Sequence[int],
@@ -280,6 +331,7 @@ def _make_buckets(dims: Sequence[int], offsets: Sequence[int],
     into contiguous runs. Runs never merge across leaves: a run that
     covers one leaf exactly is tagged with its leaf index, enabling the
     flat-free direct-leaf execution path."""
+    n_leaves = len(leaf_sizes)
     by_dim: dict = {}
     order: List[int] = []
     for uid, d in enumerate(dims):
@@ -307,8 +359,12 @@ def _make_buckets(dims: Sequence[int], offsets: Sequence[int],
             whole = (li >= 0 and start == leaf_offsets[li]
                      and k * d == leaf_sizes[li])
             frozen.append((start, k, li if whole else -1))
+        first = min((_first_touched_leaf(o, unit_leaf[u], leaf_offsets)
+                     for u, o in zip(ids, offs)), default=0)
+        ready = max(0, n_leaves - 1 - first)
         buckets.append(Bucket(dim=d, unit_ids=tuple(ids),
-                              offsets=tuple(offs), runs=tuple(frozen)))
+                              offsets=tuple(offs), runs=tuple(frozen),
+                              ready=ready))
     return tuple(buckets)
 
 

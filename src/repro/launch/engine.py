@@ -200,7 +200,7 @@ class Engine:
         return measurement_plan(self._local_param_sds(),
                                 self.model.stacked())
 
-    def comm_plans(self):
+    def comm_plans(self, comp: Optional[CompressionConfig] = None):
         """(rest_plan, fsdp_plan): the static UnitPlans the train step
         executes compression through.
 
@@ -208,11 +208,13 @@ class Engine:
         the tp/fsdp partition applied) — the same shapes _aggregate_grads
         traces inside shard_map — and cached on (structure, shapes,
         granularity), so the first train-step trace and any pre-trace
-        caller (train.py summary, bits.comm_report) share one plan
-        object. fsdp_plan is None when no leaf is fsdp-aggregated or the
-        master compressor is identity (no Q_M pass runs on those leaves).
+        caller (train.py summary, bits.comm_report, comm_sched) share one
+        plan object. `comp` overrides the engine config (the decision →
+        step path). fsdp_plan is None when no leaf is fsdp-aggregated or
+        the master compressor is identity (no Q_M pass runs on those
+        leaves).
         """
-        comp = self.comp or CompressionConfig(strategy="dense")
+        comp = comp or self.comp or CompressionConfig(strategy="dense")
         stacked = self.model.stacked()
         fsdp_mask = self.model.fsdp_mask()
         shapes = self._local_param_sds()
@@ -227,10 +229,14 @@ class Engine:
         return rest_plan, fsdp_plan
 
     def _aggregate_grads(self, grads, key,
-                         comp: Optional[CompressionConfig] = None):
+                         comp: Optional[CompressionConfig] = None,
+                         schedule=None):
         """Paper's Algorithm 1 over the DP axes, executed through the
         static UnitPlans (one batched compressor dispatch per unit size
-        class — built once at jit-trace time, cached thereafter)."""
+        class — built once at jit-trace time, cached thereafter). With
+        `schedule` (a CommSchedule for the rest plan) or comp.fusion_bytes
+        set, the rest leaves stream through the backward-ordered fused
+        message schedule — bit-identical numerics."""
         model, dist = self.model, self.dist
         comp = comp if comp is not None else self.comp
         stacked = model.stacked()
@@ -249,7 +255,8 @@ class Engine:
         # rest leaves: full bidirectional pipeline
         agg_rest, _ = compressed_allreduce(g_rest, s_rest, comp, dist.dp,
                                            key, self.dp_size,
-                                           plan=rest_plan)
+                                           plan=rest_plan,
+                                           schedule=schedule)
         # fsdp leaves: Q_W already applied in the backward hook; grads are
         # scattered+averaged. Apply Q_M layer-wise (identical key on every
         # device -> consistent master compression).
@@ -265,12 +272,21 @@ class Engine:
     def build_train_step(self, lr_schedule=None, *,
                          comp: Optional[CompressionConfig] = None,
                          telemetry: bool = False,
-                         telemetry_entire_model: bool = True):
+                         telemetry_entire_model: bool = True,
+                         schedule=None):
         """The sharded, jitted train step.
 
         `comp` overrides the engine's CompressionConfig for THIS step
         (the controller's decision → step path; `None` keeps engine
-        default — identical graph to the pre-controller behavior). With
+        default — identical graph to the pre-controller behavior).
+        `schedule` streams the DP gradient aggregation through a
+        CommSchedule: pass a fusion-bytes number (compiled against the
+        engine's cached rest plan; 0 = per-bucket messages, math.inf =
+        one fused message) or a prebuilt CommSchedule from
+        launch.comm_sched.engine_schedule. Scheduling is bit-identical —
+        it changes program order and wire-message accounting, never
+        numerics (the comp.fusion_bytes field is the decision-carried
+        equivalent; an explicit `schedule` wins). With
         `telemetry=True` the step takes and returns a
         control.telemetry.TelemetryState as an extra (replicated)
         argument: (params, opt, batch, step, telem) -> (params, opt,
@@ -286,6 +302,10 @@ class Engine:
         model, cfg, opt = self.model, self.cfg, self.opt
         dist = self.dist
         comp_eff = comp if comp is not None else self.comp
+        if schedule is not None:
+            from repro.launch.comm_sched import resolve_schedule
+            rest_plan, _ = self.comm_plans(comp_eff)
+            schedule = resolve_schedule(rest_plan, schedule)
         sched = lr_schedule or (lambda s: jnp.float32(self.opt.lr))
         if telemetry:
             from repro.control.telemetry import accumulate, measure
@@ -327,7 +347,8 @@ class Engine:
                 grads = jax.tree_util.tree_map(
                     lambda g: (g * jnp.asarray(inv, g.dtype)), grads)
                 loss = lsum * inv
-            agg = self._aggregate_grads(grads, key, comp_eff)
+            agg = self._aggregate_grads(grads, key, comp_eff,
+                                        schedule=schedule)
             if telemetry:
                 qw = (comp_eff or CompressionConfig(strategy="dense")).qw
                 inc = measure(mplan, qw, grads, key, grads_hat=agg,

@@ -33,6 +33,8 @@ def build_controller(args, eng, sched):
         kw["budget"] = args.variance_budget
     if args.policy == "bit_budget":
         kw["bits_per_step"] = args.bit_budget
+    if args.policy == "fusion":
+        kw["alpha_us"] = args.alpha_us
     policy = make_policy(args.policy, **kw)
     collect = policy.needs_telemetry or bool(args.telemetry_out)
     return engine_controller(eng, policy, lr_schedule=sched,
@@ -53,7 +55,8 @@ def build_compression(args) -> CompressionConfig:
         qm=make_compressor(args.qm),
         granularity=Granularity(args.granularity, args.block_size),
         strategy=args.strategy,
-        error_feedback=args.error_feedback)
+        error_feedback=args.error_feedback,
+        fusion_bytes=args.fusion_bytes)
 
 
 def main(argv=None):
@@ -75,6 +78,15 @@ def main(argv=None):
     ap.add_argument("--block-size", type=int, default=65536)
     ap.add_argument("--strategy", default="simulated")
     ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--fusion-bytes", type=float, default=None,
+                    help="comm-schedule fusion threshold in bytes: stream "
+                         "aggregation through the backward-ordered "
+                         "CommSchedule, fusing buckets below this size "
+                         "into one wire message (0 = per-bucket messages, "
+                         "inf = one message; default: unscheduled)")
+    ap.add_argument("--alpha-us", type=float, default=50.0,
+                    help="per-message link latency for the fusion policy "
+                         "and the modeled comm report")
     ap.add_argument("--policy", default=None, choices=list(POLICIES),
                     help="adaptive compression policy; routes the run "
                          "through the control.Controller (default: the "
@@ -121,6 +133,16 @@ def main(argv=None):
     for tag, p in (("dp", rest_plan), ("fsdp", fsdp_plan)):
         if p is not None:
             print(f"plan[{tag}]: {p.summary()}")
+    if args.fusion_bytes is not None and rest_plan is not None:
+        from repro.launch.comm_sched import engine_schedule, schedule_report
+        s = engine_schedule(eng, args.fusion_bytes)
+        rep = schedule_report(s, comp, eng.dp_size, alpha_us=args.alpha_us)
+        print(f"schedule[dp]: {s.summary()}")
+        print(f"schedule[dp]: modeled exposed comm "
+              f"{rep['model']['exposed_comm_us']:.0f}us of "
+              f"{rep['model']['comm_us_total']:.0f}us "
+              f"(overlap {rep['model']['overlap_frac']:.0%}; model, not "
+              f"measurement — trust the message counts)")
 
     it = lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
     key = jax.random.key(args.seed)

@@ -32,19 +32,12 @@ def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-try:
-    # jax 0.4.x ships optimization_barrier with no batching rule; register
-    # the obvious pass-through (operands map 1:1 to outputs) so the barrier
-    # survives vmap (simulated multi-worker grads vmap over the model).
-    from jax.interpreters import batching as _batching
-    from jax._src.lax import lax as _lax_internal
-    _barrier_p = _lax_internal.optimization_barrier_p
-    if _barrier_p not in _batching.primitive_batchers:
-        def _barrier_batch(args, dims, **params):
-            return _barrier_p.bind(*args, **params), dims
-        _batching.primitive_batchers[_barrier_p] = _barrier_batch
-except (ImportError, AttributeError):  # newer jax: rule exists upstream
-    pass
+# jax 0.4.x ships optimization_barrier with no batching rule; the shared
+# shim lives in core.schedule (the other barrier user) — idempotent, so
+# calling it again here keeps this module import-order independent.
+from repro.core.schedule import register_barrier_batching_rule
+
+register_barrier_batching_rule()
 
 
 @jax.custom_vjp
