@@ -7,12 +7,12 @@ verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 
 # Tier-1 minus the long-running suites (distributed subprocess, system
-# end-to-end, per-arch smoke) and the full comm-schedule equivalence
-# sweep (`sched` marker — tests/test_schedule.py keeps an unmarked smoke
-# subset in the inner loop) — the inner-loop command. Full `make verify`
-# before shipping.
+# end-to-end, per-arch smoke) and the full equivalence sweeps (`sched` /
+# `wire` markers — tests/test_schedule.py and tests/test_wire.py keep
+# unmarked smoke subsets in the inner loop) — the inner-loop command.
+# Full `make verify` before shipping.
 verify-fast:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire"
 
 # Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan
 # dispatches, adaptive controller). Writes BENCH_unitplan.json and
@@ -44,5 +44,12 @@ bench-schedule: bench-guard
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
 	  "from benchmarks.microbench import schedule; schedule()"
 
+# Just the wire benchmark (accounted vs measured packed bits per model
+# config x codec x fusion threshold) -> BENCH_wire.json. Clean-tree
+# guarded like every BENCH artifact.
+bench-wire: bench-guard
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
+	  "from benchmarks.microbench import wire; wire()"
+
 .PHONY: verify verify-fast bench bench-guard bench-unitplan \
-	bench-controller bench-schedule
+	bench-controller bench-schedule bench-wire

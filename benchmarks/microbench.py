@@ -229,6 +229,81 @@ def schedule(out_path: str = None):
 
 
 # --------------------------------------------------------------------------
+# wire benchmark: accounted vs MEASURED bits per config x codec x fusion
+# --------------------------------------------------------------------------
+
+def wire(out_path: str = None):
+    """BENCH_wire.json: the accounted-vs-measured wire study — for the
+    resnet9 and phi4-mini gradient trees x six codecs x fusion
+    thresholds: analytic payload bits (bits.comm_report's accounting),
+    MEASURED packed-payload bits (8 x the real codec bytes — what
+    schedule wire execution materializes; the differential suite proves
+    the equality), the per-codec word-padding slack separating them, and
+    the fused-message buffer/header bytes. All numbers are static counts
+    — deterministic and immune to the container's wall-clock noise — plus
+    one timed row for the 1M-element qsgd pack hot path (pallas vs jnp;
+    noisy, trust the counts)."""
+    from math import inf
+    from repro.core import (build_schedule, make_compressor,
+                            message_layouts, wire_codec)
+
+    gran = Granularity("layerwise")
+    thresholds = [("per_bucket", 0.0), ("fused_64kib", float(1 << 16)),
+                  ("one_shot", inf)]
+    codecs = [("topk", {"ratio": 0.01}), ("randomk", {"ratio": 0.01}),
+              ("qsgd", {"levels": 16}), ("terngrad", {}), ("signsgd", {}),
+              ("natural", {})]
+    report = {}
+    for name, tree, sm in _grad_trees():
+        plan = build_plan(tree, sm, gran)
+        entry = {"num_units": plan.num_units,
+                 "num_dispatches": plan.num_dispatches,
+                 "dense_bits": 32 * plan.total}
+        for cname, kw in codecs:
+            c = make_compressor(cname, **kw)
+            codec = wire_codec(c)
+            acct = sum(c.payload_bits(d) for d in plan.unit_dims)
+            meas = sum(codec.wire_bits(d) for d in plan.unit_dims)
+            centry = {"accounted_bits": acct, "measured_bits": meas,
+                      "padding_bits": meas - acct,
+                      "compression_x": round(32 * plan.total / meas, 1)}
+            for label, fb in thresholds:
+                sched = build_schedule(plan, fb)
+                lays = message_layouts(sched, codec)
+                payload = 8 * sum(l.payload_nbytes for l in lays)
+                # the acceptance property: the fused buffers carry
+                # exactly the measured payload, never more
+                assert payload == meas, (name, cname, label)
+                centry[label] = {
+                    "n_messages": sched.num_messages,
+                    "buffer_bytes": sum(l.total_nbytes for l in lays),
+                    "header_bytes": sum(l.header_nbytes for l in lays),
+                }
+            entry[cname] = centry
+            csv_line(f"wire_{name}_{cname}", 0.0,
+                     f"accounted={acct} measured={meas} "
+                     f"padding={meas - acct}")
+        report[name] = entry
+
+    # the pack hot path, timed (entire-model single unit: no vmap, so
+    # the pallas kernel path is exercised end to end)
+    x = jax.random.normal(KEY, (D,))
+    c = make_compressor("qsgd", levels=16)
+    for label, use_pallas in (("pallas", True), ("jnp", False)):
+        codec = wire_codec(c, use_pallas=use_pallas)
+        enc = jax.jit(lambda v, k: codec.encode(v, k))
+        us = _time_median(enc, x, KEY, reps=3, warmup=1)
+        report.setdefault("encode_1m_qsgd_us", {})[label] = round(us, 1)
+        csv_line(f"wire_encode_1m_qsgd_{label}", us,
+                 f"payload_bytes={codec.nbytes(D)}")
+
+    path = out_path or os.path.join(_REPO_ROOT, "BENCH_wire.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
+# --------------------------------------------------------------------------
 # adaptive-controller benchmark: telemetry overhead + replan/retrace cost
 # --------------------------------------------------------------------------
 
@@ -320,4 +395,5 @@ def run():
     kernels()
     unitplan()
     schedule()
+    wire()
     controller()

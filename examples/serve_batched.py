@@ -30,17 +30,16 @@ def main():
     eng = Engine(CFG, mesh)
     params, _ = eng.init_state(seed=1)
     serve = eng.build_serve_step(InputShape("d", CACHE, BATCH, "decode"))
+    # the engine's shard_map'd prefill — a bare jit(model.prefill) has no
+    # bound TP axes — with the cache sized for the generation budget
+    prefill = eng.build_prefill(InputShape("p", PROMPT, BATCH, "prefill"),
+                                cache_len=CACHE)
 
     prompts = jax.random.randint(jax.random.key(0), (BATCH, PROMPT), 0,
                                  CFG.vocab)
     with mesh:
-        # prefill (cache sized for the generation budget)
-        logits, cache = jax.jit(
-            lambda p, b: eng.model.prefill(p, b, jax.random.key(0),
-                                           cache_len=CACHE))(
-            params, {"tokens": prompts})
-        # shard the cache/logits onto the mesh happens automatically via
-        # jit; now decode greedily
+        logits, cache = prefill(params, {"tokens": prompts})
+        # now decode greedily with the seq-sharded cache
         toks = jnp.argmax(logits, -1).astype(jnp.int32)
         out = [toks]
         for t in range(GEN):

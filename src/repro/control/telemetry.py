@@ -144,14 +144,33 @@ def measure(mplan: UnitPlan, qw: Compressor, grads, key: Array,
     )
 
 
-def payload_bits_per_step(mplan: UnitPlan, qw: Compressor) -> int:
+def _codec_or_none(qw: Compressor):
+    from repro.core.wire import wire_codec
+    try:
+        return wire_codec(qw)
+    except ValueError:
+        return None
+
+
+def payload_bits_per_step(mplan: UnitPlan, qw: Compressor,
+                          measured: bool = True) -> int:
     """Static uplink payload bits per step, summed bucket-by-bucket
     (n_units × per-unit payload). Deliberately a different summation
     order than bits.comm_report's per-unit walk — the tests assert the
-    two agree."""
+    two agree.
+
+    `measured=True` (the default since the wire subsystem landed)
+    charges each bucket the REAL packed wire size of its codec
+    (core.wire, 8 x payload bytes — what schedule wire execution
+    materializes; the differential suite proves the equality), falling
+    back to the analytic accounting for compressors without a codec.
+    `measured=False` keeps the pure accounting.
+    """
+    codec = _codec_or_none(qw) if measured else None
     total = 0
     for b in mplan.buckets:
-        total += b.n * qw.payload_bits(b.dim)
+        total += b.n * (codec.wire_bits(b.dim) if codec is not None
+                        else qw.payload_bits(b.dim))
     return total
 
 
@@ -173,7 +192,9 @@ def summarize(state: TelemetryState, mplan: UnitPlan,
     qsq = [float(v) for v in state.qw_sumsq]
     qerr = [float(v) for v in state.qw_errsq]
     aerr = [float(v) for v in state.agg_errsq]
+    codec = _codec_or_none(qw) if qw is not None else None
     total_payload = 0
+    total_wire = 0
     for i, b in enumerate(mplan.buckets):
         n_elems = steps * b.n * b.dim
         mean = gsum[i] / n_elems
@@ -190,9 +211,16 @@ def summarize(state: TelemetryState, mplan: UnitPlan,
         if qw is not None:
             entry["payload_bits"] = b.n * qw.payload_bits(b.dim)
             total_payload += entry["payload_bits"]
+            if codec is not None:
+                # measured leg: the REAL packed bytes x 8 (accounted +
+                # word-padding slack — the wire truth)
+                entry["wire_bits"] = b.n * codec.wire_bits(b.dim)
+                total_wire += entry["wire_bits"]
         out["buckets"].append(entry)
     if qw is not None:
         out["payload_bits_per_step"] = total_payload
+        if codec is not None:
+            out["wire_bits_per_step"] = total_wire
     em_sq = float(state.em_sumsq)
     if em_sq > 0.0:  # counterfactual leg was measured (entire_model=True)
         out["entire_model"] = {

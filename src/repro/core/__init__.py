@@ -3,7 +3,8 @@ communication framework (AAAI'20, Dutta et al.)."""
 from repro.core.compressors import (Compressor, Identity, RandomK, TopK,
                                     ThresholdV, AdaptiveThreshold, TernGrad,
                                     QSGD, SignSGD, NaturalCompression,
-                                    make_compressor, available_compressors)
+                                    index_bits, make_compressor,
+                                    available_compressors)
 from repro.core.granularity import (Granularity, stacked_mask, unit_dims,
                                     num_units, apply_unitwise,
                                     apply_unitwise_with_state,
@@ -16,4 +17,9 @@ from repro.core.schedule import (CommSchedule, Message, FUSE_ALL,
 from repro.core.aggregation import (CompressionConfig, compressed_allreduce,
                                     aggregate_simulated_workers,
                                     no_compression, STRATEGIES)
-from repro.core.bits import comm_report, CommReport
+from repro.core.bits import (comm_report, CommReport,
+                             measured_bits_from_payloads)
+from repro.core.wire import (WireCodec, DenseCodec, QSGDCodec, TernGradCodec,
+                             SignSGDCodec, NaturalCodec, SparseCodec,
+                             MessageLayout, has_wire_codec, message_layouts,
+                             wire_codec, word_padding)

@@ -200,6 +200,51 @@ def _telemetry_inc(telemetry_plan, cfg, grads, agg, key, entire_model):
                    entire_model=entire_model)
 
 
+def _wire_codec_for(cfg: CompressionConfig, allgather_available=True):
+    """Resolve + validate the wire codec for a config's worker compressor
+    (lazy import keeps aggregation importable before wire).
+    `allgather_available=False` is the single-device simulated-worker
+    harness, which has no allgather wire path to point the caller at."""
+    from repro.core.wire import wire_codec
+    if cfg.strategy not in ("simulated", "allgather"):
+        raise ValueError(
+            f"wire=True supports the simulated/allgather strategies, not "
+            f"{cfg.strategy!r}")
+    codec = wire_codec(cfg.qw)
+    if cfg.strategy == "simulated" and not codec.exact_sim:
+        hint = ("run it under strategy='allgather', whose unpacked path "
+                "already communicates the capacity payload"
+                if allgather_available else "drop wire=True")
+        raise ValueError(
+            f"{cfg.qw.name}: the static wire format is capacity-bounded "
+            f"while sim is exact masking (the theory/practice gap the "
+            f"paper is about) — {hint}")
+    if cfg.strategy == "allgather" and cfg.wire_dtype == "bfloat16":
+        raise ValueError("wire=True packs f32 value legs; bfloat16 wire "
+                         "casting is a different codec (unsupported)")
+    return codec
+
+
+def _wire_post(cfg: CompressionConfig, axis_names, codec):
+    """The post-decode leg of the wire pipeline: the collective + master
+    compression that _unit_simulated/_unit_allgather run after Q_W —
+    identical arithmetic, with Q_W replaced by the bit-exact payload
+    round-trip (simulated) or the packed buffer through the collective
+    (allgather)."""
+    if cfg.strategy == "simulated":
+        def post(payload, xhat, key):
+            xm = _mean_psum(_wire(xhat, cfg), axis_names).astype(xhat.dtype)
+            return cfg.qm.sim(xm, _master_key(key))
+    else:  # allgather: the REAL uint8 payload crosses the collective
+        def post(payload, xhat, key):
+            d = xhat.shape[0]
+            gathered = jax.lax.all_gather(payload, axis_names, axis=0,
+                                          tiled=False)
+            decoded = jax.vmap(lambda p: codec.decode(p, d))(gathered)
+            return cfg.qm.sim(jnp.mean(decoded, axis=0), _master_key(key))
+    return post
+
+
 def _executor(plan: UnitPlan, cfg: CompressionConfig,
               schedule: Optional[CommSchedule]):
     """What execution runs through: an explicit CommSchedule, the schedule
@@ -220,7 +265,8 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                          plan: Optional[UnitPlan] = None,
                          schedule: Optional[CommSchedule] = None,
                          telemetry_plan: Optional[UnitPlan] = None,
-                         telemetry_entire_model: bool = True):
+                         telemetry_entire_model: bool = True,
+                         wire: bool = False):
     """Aggregate data-parallel gradients with bidirectional compression.
 
     Must be called inside shard_map. Returns (grads_hat, new_ef_state) —
@@ -233,6 +279,13 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
     plan for (grads structure, granularity) is fetched. Pass `schedule`
     (or set cfg.fusion_bytes) to stream execution through a CommSchedule
     — same numerics, backward-ready fused message order.
+
+    `wire=True` materializes the worker compression as REAL bit-packed
+    payloads (core.wire): execution streams through a CommSchedule
+    (cfg.fusion_bytes, default 0 = per-bucket messages) whose fused
+    messages are actual uint8 buffers; under `allgather` the packed
+    bytes themselves cross the collective. Bit-identical to the
+    unpacked path — every codec round-trips exactly to its compressor.
     """
     axis_names = tuple(axis_names)
     if plan is None and schedule is not None:
@@ -245,6 +298,12 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                                        telemetry_entire_model)
 
     if cfg.strategy == "dense":
+        if wire:
+            raise ValueError(
+                "wire=True with strategy='dense': the dense allreduce "
+                "moves raw tensors — there is no compressed payload to "
+                "pack; use strategy='simulated' with an identity "
+                "compressor for a packed dense-f32 baseline")
         agg = jax.tree_util.tree_map(
             lambda g: _mean_psum(_wire(g, cfg), axis_names).astype(g.dtype),
             grads)
@@ -256,6 +315,22 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
     if plan is None:
         plan = build_plan(grads, stacked, cfg.granularity)
     ex = _executor(plan, cfg, schedule)
+
+    if wire:
+        codec = _wire_codec_for(cfg)
+        sched = (ex if isinstance(ex, CommSchedule)
+                 else build_schedule(plan, 0.0))
+        post = _wire_post(cfg, axis_names, codec)
+        wk = partial(_worker_key, axis_names=axis_names)
+        if cfg.error_feedback:
+            if ef_state is None:
+                raise ValueError("error_feedback=True requires ef_state")
+            agg, ef, _bufs = sched.execute_with_state(
+                post, grads, ef_state, key, wire=codec, wire_key=wk)
+            return ret(agg, ef)
+        agg, _bufs = sched.execute(post, grads, key, wire=codec,
+                                   wire_key=wk)
+        return ret(agg, ef_state)
 
     if cfg.error_feedback:
         if ef_state is None:
@@ -284,7 +359,8 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
                                 plan: Optional[UnitPlan] = None,
                                 schedule: Optional[CommSchedule] = None,
                                 telemetry_plan: Optional[UnitPlan] = None,
-                                telemetry_entire_model: bool = True):
+                                telemetry_entire_model: bool = True,
+                                wire: bool = False):
     """Single-device realization of Algorithm 1 for the paper-repro
     experiments: `worker_grads` leaves carry a leading worker axis n.
 
@@ -296,7 +372,10 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
     mean worker gradient vs the aggregated output. `schedule` /
     cfg.fusion_bytes stream the worker compression pass through a
     CommSchedule (bit-identical; the vmap over workers batches the
-    ordering barriers).
+    ordering barriers). `wire=True` materializes each worker's
+    compression pass as real bit-packed message buffers (core.wire) —
+    bit-identical output; the master Q_M pass stays dense (it never
+    leaves the device in Algorithm 1's master step).
     """
     n = jax.tree_util.tree_leaves(worker_grads)[0].shape[0]
     if plan is None and schedule is not None:
@@ -307,9 +386,20 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
             worker_grads)
         plan = build_plan(per_worker_tree, stacked, cfg.granularity)
     ex = _executor(plan, cfg, schedule)
+    codec = None
+    if wire:
+        codec = _wire_codec_for(
+            cfg if cfg.strategy == "simulated"
+            else dataclasses.replace(cfg, strategy="simulated"),
+            allgather_available=False)
+        wire_sched = (ex if isinstance(ex, CommSchedule)
+                      else build_schedule(plan, 0.0))
 
     def per_worker(g_i, i):
         wkey = jax.random.fold_in(key, i)
+        if codec is not None:
+            out, _bufs = wire_sched.execute(None, g_i, wkey, wire=codec)
+            return out
 
         def fn(x, ukey):
             return cfg.qw.sim(x, ukey)
@@ -320,12 +410,17 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
             raise ValueError("error_feedback=True requires ef_state")
 
         def per_worker_ef(g_i, m_i, i):
+            wkey = jax.random.fold_in(key, i)
+            if codec is not None:
+                out, m_new, _bufs = wire_sched.execute_with_state(
+                    None, g_i, m_i, wkey, wire=codec)
+                return out, m_new
+
             def fn(x, m, ukey):
                 e = x + m
                 q = cfg.qw.sim(e, ukey)
                 return q, e - q
-            return ex.execute_with_state(fn, g_i, m_i,
-                                         jax.random.fold_in(key, i))
+            return ex.execute_with_state(fn, g_i, m_i, wkey)
         compressed, new_ef = jax.vmap(per_worker_ef, in_axes=(0, 0, 0))(
             worker_grads, ef_state, jnp.arange(n))
     else:

@@ -52,11 +52,25 @@ def _wire_bits(cfg: CompressionConfig) -> int:
     return 16 if cfg.wire_dtype == "bfloat16" else 32
 
 
+def measured_bits_from_payloads(payloads) -> int:
+    """The wire truth: 8x the byte count of REAL encoded buffers (uint8
+    arrays, or any pytree of them). On bare per-unit payloads this
+    equals accounted payload bits + the documented word-padding slack,
+    exactly (the differential suite's subject). The fused message
+    buffers from `CommSchedule.execute(..., wire=codec)` additionally
+    carry their uint32 header table — 32*(1+n_buckets) bits per message,
+    split out via `wire.message_layouts`."""
+    import jax
+    return sum(8 * int(leaf.size)
+               for leaf in jax.tree_util.tree_leaves(payloads))
+
+
 def comm_report(cfg: CompressionConfig,
                 unit_dims: Union[UnitPlan, Sequence[int]],
                 n_workers: int,
                 schedule: Optional[CommSchedule] = None,
-                alpha_bits_per_message: int = 0) -> CommReport:
+                alpha_bits_per_message: int = 0,
+                measured: bool = False) -> CommReport:
     """Wire cost of one aggregation step.
 
     `cfg` is a CompressionConfig, or a control.policy.CompressionDecision
@@ -78,6 +92,11 @@ def comm_report(cfg: CompressionConfig,
     latency in bit-equivalents (link alpha x bandwidth); it feeds
     `latency_bits()` / `total_bits_with_latency()` and never changes the
     payload fields.
+
+    `measured=True` charges the compressed-payload legs the REAL packed
+    wire size (core.wire codec bytes x 8 — exactly what a materialized
+    payload measures) instead of the analytic `payload_bits`; the two
+    differ only by the documented per-codec word-padding slack.
     """
     if hasattr(cfg, "to_config"):  # CompressionDecision (duck-typed: no
         cfg = cfg.to_config()      # core -> control import)
@@ -91,6 +110,12 @@ def comm_report(cfg: CompressionConfig,
     n_messages = (schedule.num_messages if schedule is not None
                   else len(unit_dims))
 
+    if measured:
+        from repro.core.wire import wire_codec
+        bits_of = wire_codec(cfg.qw).wire_bits
+    else:
+        bits_of = cfg.qw.payload_bits
+
     w = _wire_bits(cfg)
     if cfg.strategy == "dense":
         up = down = w * d_total  # ring AR: d out + d in (per direction ~d)
@@ -98,13 +123,13 @@ def comm_report(cfg: CompressionConfig,
         # numerically compressed but the collective still moves dense grads
         up = down = w * d_total
     elif cfg.strategy == "allgather":
-        payload = sum(cfg.qw.payload_bits(d) for d in unit_dims)
+        payload = sum(bits_of(d) for d in unit_dims)
         up = payload                       # contribute own payload
         down = (n_workers - 1) * payload   # receive everyone else's
     elif cfg.strategy == "rs_compress_ag":
         # reduce-scatter dense wire (d elems traverse once) + all-gather of
         # per-shard payloads
-        payload_shard = sum(cfg.qw.payload_bits(max(1, d // n_workers))
+        payload_shard = sum(bits_of(max(1, d // n_workers))
                             for d in unit_dims)
         up = w * d_total // 1 + payload_shard
         down = (n_workers - 1) * payload_shard

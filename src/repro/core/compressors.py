@@ -47,6 +47,16 @@ def _k_of(ratio: float, d: int) -> int:
     return max(1, min(d, int(round(ratio * d))))
 
 
+def index_bits(d: int) -> int:
+    """Wire width of one sparse-record index: ceil(log2(d)) bits address d
+    positions (min 1 — a record always carries an index field). This is
+    the dim-dependent width the packed codecs (core/wire.py) put on the
+    wire, and therefore what payload accounting charges: a 32-bit index
+    per kept value — what the first accounting here assumed — overstates
+    small layers' sparse payloads by >10x."""
+    return max(1, (d - 1).bit_length()) if d > 1 else 1
+
+
 def pack_signs(bits: Array) -> Array:
     """Pack a {0,1} int32 vector (length multiple-of-8 padded) into uint8."""
     d = bits.shape[0]
@@ -141,7 +151,7 @@ class RandomK(Compressor):
 
     def payload_bits(self, d: int) -> int:
         k = _k_of(self.ratio, d)
-        return k * (32 + 32)
+        return k * (32 + index_bits(d))
 
     def omega(self, d: int) -> Optional[float]:
         k = _k_of(self.ratio, d)
@@ -176,7 +186,7 @@ class TopK(Compressor):
         return out.at[payload["idx"]].set(payload["val"].astype(dtype))
 
     def payload_bits(self, d: int) -> int:
-        return _k_of(self.ratio, d) * 64
+        return _k_of(self.ratio, d) * (32 + index_bits(d))
 
     def omega(self, d: int) -> Optional[float]:
         return 0.0
@@ -212,7 +222,7 @@ class ThresholdV(Compressor):
         return out.at[payload["idx"]].set(payload["val"].astype(dtype))
 
     def payload_bits(self, d: int) -> int:
-        return _k_of(self.cap_ratio, d) * 64
+        return _k_of(self.cap_ratio, d) * (32 + index_bits(d))
 
     def omega(self, d: int) -> Optional[float]:
         return 0.0
@@ -252,7 +262,7 @@ class AdaptiveThreshold(Compressor):
         return out.at[payload["idx"]].set(payload["val"].astype(dtype))
 
     def payload_bits(self, d: int) -> int:
-        return _k_of(self.cap_ratio, d) * 64
+        return _k_of(self.cap_ratio, d) * (32 + index_bits(d))
 
     def omega(self, d: int) -> Optional[float]:
         return 0.0
@@ -306,6 +316,13 @@ class QSGD(Compressor):
     levels: int = 16  # s; payload int8 holds signed levels up to 127
     unbiased: bool = True
 
+    @property
+    def entry_bits(self) -> int:
+        """Wire bits per quantized entry: offset-binary codes in
+        [0, 2s] (the single source both payload_bits and the wire codec
+        read — they can never desync)."""
+        return max(2, math.ceil(math.log2(2 * self.levels + 1)))
+
     def _quantize(self, xf: Array, key: Array):
         nrm = jnp.linalg.norm(xf) + _EPS
         y = jnp.abs(xf) / nrm * self.levels
@@ -329,8 +346,7 @@ class QSGD(Compressor):
                 * (payload["norm"][0] / self.levels)).astype(dtype)
 
     def payload_bits(self, d: int) -> int:
-        bits_per = max(2, math.ceil(math.log2(2 * self.levels + 1)))
-        return bits_per * d + 32
+        return self.entry_bits * d + 32
 
     def omega(self, d: int) -> Optional[float]:
         s = self.levels

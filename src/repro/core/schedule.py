@@ -138,11 +138,28 @@ class CommSchedule:
 
     # ---- execution -------------------------------------------------------
     def execute(self, fn: Callable[[Array, Array], Array], grads,
-                key: Array):
+                key: Array, *, wire=None, wire_key=None):
         """UnitPlan.execute, streamed: identical per-bucket dispatches and
         PRNG keys, issued message by message in backward-ready order with
         an ordering barrier between consecutive messages. Bit-identical
-        output (the equivalence harness's subject)."""
+        output (the equivalence harness's subject).
+
+        `wire` (a core.wire.WireCodec) switches to REAL wire buffers:
+        each message's units are encoded to bit-packed payloads and
+        concatenated into ONE uint8 buffer (header table of per-bucket
+        byte offsets), decoding reads back out of the buffer, and the
+        inter-message barrier pins on the buffer itself. In wire mode
+        `fn` is the post-decode closure fn(payload_row, xhat_row,
+        unit_key) -> y (None = return the decoded gradient), `wire_key`
+        optionally transforms the unit key for the encode leg (the
+        worker-key fold), and the return value is (tree, buffers) —
+        sum(8 * b.size) over `buffers` is the measured wire truth.
+        Because every codec round-trips bit-exactly to its compressor's
+        `sim`, wire mode never changes numerics either."""
+        if wire is not None:
+            from repro.core.wire import execute_schedule_wire
+            return execute_schedule_wire(self, wire, fn, grads, key,
+                                         wire_key=wire_key)
         plan = self.plan
         leaves = jax.tree_util.tree_leaves(grads)
         flat = plan.flatten(grads) if plan.needs_flat else None
@@ -164,11 +181,22 @@ class CommSchedule:
                 out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)
         return plan._assemble(out_leaves, out_flat)
 
-    def execute_with_state(self, fn, grads, state, key: Array):
+    def execute_with_state(self, fn, grads, state, key: Array, *,
+                           wire=None, wire_key=None):
         """UnitPlan.execute_with_state, streamed (error-feedback memory
         threads through untouched by ordering/fusion: every unit's state
         row is read and written exactly once, in whichever message its
-        bucket landed)."""
+        bucket landed).
+
+        `wire` routes through real buffers exactly as in `execute`; the
+        EF discipline is fixed to e = x + m, m' = e - decode(payload)
+        (bit-identical to the unpacked path by the round-trip property),
+        `fn` is the post-decode closure (or None), and the return value
+        grows to (tree, m_tree, buffers)."""
+        if wire is not None:
+            from repro.core.wire import execute_schedule_wire_with_state
+            return execute_schedule_wire_with_state(
+                self, wire, fn, grads, state, key, wire_key=wire_key)
         plan = self.plan
         leaves = jax.tree_util.tree_leaves(grads)
         need = plan.needs_flat

@@ -1,0 +1,548 @@
+"""WireCodec: real bit-packed wire payloads for every compressor.
+
+The paper's subject is the gap between what theory assumes and what
+implementations actually put on the wire. Until this module, the repo's
+wire costs were pure accounting (`bits.comm_report`) — analytic bit
+counts that nothing forced to be ACHIEVABLE. A `WireCodec` closes that
+loop: per compressor, a jit-able `encode(unit) -> uint8 payload` /
+`decode(payload) -> unit` pair whose output is a real byte buffer
+(`payload.size * 8` is the wire truth) and whose round-trip is
+BIT-IDENTICAL to the simulated operator:
+
+    codec.decode(codec.encode(x, key), d)  ==  compressor.sim(x, key)
+
+bit for bit — so routing execution through materialized payloads
+(`CommSchedule.execute(..., wire=codec)`) never changes numerics, and
+the accounted bits can be differentially tested against measured bytes
+(tests/test_wire.py).
+
+Codec formats (all legs little-endian; bit i of a packed leg lands in
+uint32 word i//32 at position i%32 — kernels/pack.py is the hot path,
+`kernels/ref.pack_bits_ref` the oracle):
+
+  dense      raw f32 bytes                                  32 bits/entry
+  qsgd(s)    f32 norm + b-bit offset-binary levels,         b = ceil(
+             code = level + s in [0, 2s]                    log2(2s+1))
+  terngrad   f32 scale + 2-bit codes (t+1 in {0,1,2})       2 bits/entry
+  signsgd    1-bit signs (x >= 0); majority-vote            1 bit/entry
+             aggregation operates on the packed words
+  natural    9-bit codes: sign*(exponent+128) + 255         9 bits/entry
+  topk /     k f32 values + k packed indices of             32 + ceil(
+  randomk    ceil(log2(d)) bits each (dim-dependent!)       log2(d))/rec
+  threshold  same record format, capacity-bounded count     (not sim-
+             (cap_ratio) — wire and sim genuinely differ     exact)
+
+Padding rule (documented + asserted by the differential suite): every
+packed leg rounds up to a whole uint32 word, so
+
+    codec.wire_bits(d) == compressor.payload_bits(d) + padding_bits(d)
+
+with padding_bits(d) == (-packed_leg_bits) % 32 < 32 per packed leg and
+0 for dense. The accounting can never silently drift from the wire: the
+suite asserts the equality for every codec at every granularity.
+
+Fused wire messages: `execute_schedule_wire` streams a CommSchedule
+message by message, concatenating each message's packed unit payloads
+into ONE uint8 buffer behind a header table of per-bucket byte offsets
+(uint32 [n_buckets, offset_0, ..]) — a message is a real buffer whose
+size*8 is the wire truth, and decoding reads back OUT OF the buffer so
+the bytes are load-bearing in the compiled graph.
+
+The exception that proves the paper's point: threshold_v and
+adaptive_threshold have data-dependent kept counts, so their static
+wire format (capacity-bounded records) is NOT bit-identical to their
+exact-masking `sim` — `exact_sim=False`, and the `simulated`-strategy
+wire path refuses them rather than silently changing numerics (their
+`allgather` path, which already communicates the capacity-bounded
+payload, wires exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import (AdaptiveThreshold, Compressor, Identity,
+                                    NaturalCompression, QSGD, RandomK,
+                                    SignSGD, TernGrad, ThresholdV, TopK,
+                                    _k_of, index_bits)
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+def words_for(nbits: int) -> int:
+    """uint32 words holding `nbits` packed bits."""
+    return -(-nbits // 32)
+
+
+def word_padding(nbits: int) -> int:
+    """Pad-to-word slack of one packed leg: (-nbits) % 32, always < 32."""
+    return (-nbits) % 32
+
+
+# --------------------------------------------------------------------------
+# byte-level helpers (bitcasts are exact: float payload legs round-trip
+# bit for bit)
+# --------------------------------------------------------------------------
+
+def _f32_to_u8(v: Array) -> Array:
+    return jax.lax.bitcast_convert_type(v, jnp.uint8).reshape(-1)
+
+
+def _u8_to_f32(b: Array) -> Array:
+    return jax.lax.bitcast_convert_type(b.reshape(-1, 4), jnp.float32)
+
+
+def _u32_to_u8(w: Array) -> Array:
+    return jax.lax.bitcast_convert_type(w, jnp.uint8).reshape(-1)
+
+
+def _u8_to_u32(b: Array) -> Array:
+    return jax.lax.bitcast_convert_type(b.reshape(-1, 4), jnp.uint32)
+
+
+def _pack_fields(vals: Array, width: int, use_pallas: bool) -> Array:
+    """int32 field vector (k,) with values < 2**width -> packed uint8
+    bytes (whole uint32 words; LSB-first within each field)."""
+    k = vals.shape[0]
+    bits = ((vals[:, None] >> jnp.arange(width, dtype=jnp.int32)) & 1)
+    words = ops.pack_words(bits.reshape(k * width), use_pallas=use_pallas)
+    return _u32_to_u8(words)
+
+
+def _unpack_fields(payload: Array, k: int, width: int,
+                   use_pallas: bool) -> Array:
+    """Inverse of _pack_fields -> int32 (k,)."""
+    bits = ops.unpack_words(_u8_to_u32(payload), k * width,
+                            use_pallas=use_pallas)
+    weights = jnp.int32(1) << jnp.arange(width, dtype=jnp.int32)
+    return (bits.reshape(k, width) * weights).sum(axis=1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# codecs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Bit-packed wire format of one compression unit.
+
+    Frozen + a hashable Compressor field => hashable, so a codec is a
+    valid static argument under jit and a safe lru_cache key (message
+    layouts cache on (schedule, codec)).
+
+    `use_pallas=False` (default) packs with the pure-jnp oracle — safe
+    under the vmapped bucket dispatches wire execution runs through;
+    `use_pallas=True` routes the word-packing through kernels/pack.py
+    (exercised on the non-vmapped entire-model path and in bench-wire).
+
+    `exact_sim`: decode(encode(x, key)) == comp.sim(x, key) bit for bit.
+    True for every codec except the capacity-bounded threshold records.
+    """
+    comp: Compressor = Identity()
+    use_pallas: bool = False
+
+    exact_sim = True
+
+    @property
+    def name(self) -> str:
+        return self.comp.name
+
+    # ---- static layout ---------------------------------------------------
+    def nbytes(self, d: int) -> int:
+        raise NotImplementedError
+
+    def wire_bits(self, d: int) -> int:
+        """8 * nbytes(d): exactly what a measured payload reports."""
+        return 8 * self.nbytes(d)
+
+    def padding_bits(self, d: int) -> int:
+        """Documented word-padding slack: wire_bits - accounted bits."""
+        return self.wire_bits(d) - self.comp.payload_bits(d)
+
+    # ---- wire ------------------------------------------------------------
+    def encode(self, x: Array, key: Array) -> Array:
+        raise NotImplementedError
+
+    def decode(self, payload: Array, d: int) -> Array:
+        raise NotImplementedError
+
+    def roundtrip(self, x: Array, key: Array) -> Array:
+        return self.decode(self.encode(x, key), x.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCodec(WireCodec):
+    """Passthrough: raw f32 bytes (identity / dense reference)."""
+
+    def nbytes(self, d: int) -> int:
+        return 4 * d
+
+    def encode(self, x: Array, key: Array) -> Array:
+        return _f32_to_u8(x.reshape(-1).astype(jnp.float32))
+
+    def decode(self, payload: Array, d: int) -> Array:
+        return _u8_to_f32(payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCodec(WireCodec):
+    """f32 unit norm + b-bit offset-binary levels (code = level + s)."""
+    comp: Compressor = QSGD()
+
+    @property
+    def entry_bits(self) -> int:
+        return self.comp.entry_bits  # the accounting's own formula
+
+    def nbytes(self, d: int) -> int:
+        return 4 + 4 * words_for(self.entry_bits * d)
+
+    def encode(self, x: Array, key: Array) -> Array:
+        q, nrm = self.comp._quantize(x.reshape(-1).astype(jnp.float32), key)
+        codes = q.astype(jnp.int32) + self.comp.levels
+        return jnp.concatenate([
+            _f32_to_u8(nrm[None]),
+            _pack_fields(codes, self.entry_bits, self.use_pallas)])
+
+    def decode(self, payload: Array, d: int) -> Array:
+        nrm = _u8_to_f32(payload[:4])[0]
+        codes = _unpack_fields(payload[4:], d, self.entry_bits,
+                               self.use_pallas)
+        q = codes - self.comp.levels
+        return q.astype(jnp.float32) * (nrm / self.comp.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class TernGradCodec(WireCodec):
+    """f32 unit scale + 2-bit ternary codes (t + 1 in {0, 1, 2})."""
+    comp: Compressor = TernGrad()
+
+    def nbytes(self, d: int) -> int:
+        return 4 + 4 * words_for(2 * d)
+
+    def encode(self, x: Array, key: Array) -> Array:
+        t, s = self.comp._quantize(x.reshape(-1).astype(jnp.float32), key)
+        codes = t.astype(jnp.int32) + 1
+        return jnp.concatenate([
+            _f32_to_u8(s[None]), _pack_fields(codes, 2, self.use_pallas)])
+
+    def decode(self, payload: Array, d: int) -> Array:
+        s = _u8_to_f32(payload[:4])[0]
+        t = _unpack_fields(payload[4:], d, 2, self.use_pallas) - 1
+        return t.astype(jnp.float32) * s
+
+
+@dataclasses.dataclass(frozen=True)
+class SignSGDCodec(WireCodec):
+    """1 bit per entry (x >= 0). `majority_vote` aggregates n workers'
+    payloads on the packed words — the real signSGD-with-majority-vote
+    wire protocol (Bernstein et al.): only packed signs ever travel."""
+    comp: Compressor = SignSGD()
+
+    def nbytes(self, d: int) -> int:
+        return 4 * words_for(d)
+
+    def encode(self, x: Array, key: Array) -> Array:
+        bits = (x.reshape(-1) >= 0).astype(jnp.int32)
+        return _u32_to_u8(ops.pack_words(bits, use_pallas=self.use_pallas))
+
+    def decode(self, payload: Array, d: int) -> Array:
+        bits = ops.unpack_words(_u8_to_u32(payload), d,
+                                use_pallas=self.use_pallas)
+        return (2 * bits - 1).astype(jnp.float32)
+
+    def majority_vote(self, payloads: Array, d: int) -> Array:
+        """(n_workers, nbytes) packed payloads -> one packed payload whose
+        bit i is the majority sign of entry i (ties -> +1, matching the
+        x >= 0 convention). Never materializes dense worker vectors."""
+        n = payloads.shape[0]
+        bits = jax.vmap(lambda p: ops.unpack_words(
+            _u8_to_u32(p), d, use_pallas=False))(payloads)
+        maj = (2 * bits.sum(axis=0) >= n).astype(jnp.int32)
+        return _u32_to_u8(ops.pack_words(maj, use_pallas=self.use_pallas))
+
+
+@dataclasses.dataclass(frozen=True)
+class NaturalCodec(WireCodec):
+    """9-bit codes: sign * (exponent + 128), offset by 255 into [0, 510]
+    (0 encodes exact zero)."""
+    comp: Compressor = NaturalCompression()
+
+    def nbytes(self, d: int) -> int:
+        return 4 * words_for(9 * d)
+
+    def encode(self, x: Array, key: Array) -> Array:
+        xf = x.reshape(-1).astype(jnp.float32)
+        e, sgn, zero = self.comp._exponents(xf, key)
+        bias = self.comp._BIAS + 1  # the compressor's own code offset
+        code = jnp.where(zero, 0, sgn.astype(jnp.int32) * (e + bias))
+        return _pack_fields(code + 255, 9, self.use_pallas)
+
+    def decode(self, payload: Array, d: int) -> Array:
+        code = _unpack_fields(payload, d, 9, self.use_pallas) - 255
+        sgn = jnp.sign(code).astype(jnp.float32)
+        e = jnp.abs(code) - (self.comp._BIAS + 1)
+        val = sgn * jnp.exp2(e.astype(jnp.float32))
+        return jnp.where(code == 0, 0.0, val)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseCodec(WireCodec):
+    """k records of (f32 value, ceil(log2(d))-bit index): topk / randomk
+    (exact_sim) and the capacity-bounded threshold methods (not). Values
+    travel first (4k bytes), then the packed index leg. Resolves
+    PerDimRatio wrappers per dim, so adaptive per-bucket ratios wire with
+    the active k."""
+    comp: Compressor = TopK()
+    sim_exact: bool = True
+
+    @property
+    def exact_sim(self) -> bool:  # type: ignore[override]
+        return self.sim_exact
+
+    def _c(self, d: int) -> Compressor:
+        return (self.comp.for_dim(d) if hasattr(self.comp, "for_dim")
+                else self.comp)
+
+    def _k(self, d: int) -> int:
+        c = self._c(d)
+        r = c.ratio if hasattr(c, "ratio") else c.cap_ratio
+        return _k_of(r, d)
+
+    def nbytes(self, d: int) -> int:
+        k = self._k(d)
+        return 4 * k + 4 * words_for(k * index_bits(d))
+
+    def encode(self, x: Array, key: Array) -> Array:
+        d = x.shape[0]
+        payload = self._c(d).encode(x, key)
+        return jnp.concatenate([
+            _f32_to_u8(payload["val"].astype(jnp.float32)),
+            _pack_fields(payload["idx"].astype(jnp.int32), index_bits(d),
+                         self.use_pallas)])
+
+    def decode(self, payload: Array, d: int) -> Array:
+        k = self._k(d)
+        val = _u8_to_f32(payload[:4 * k])
+        idx = _unpack_fields(payload[4 * k:], k, index_bits(d),
+                             self.use_pallas)
+        return jnp.zeros((d,), jnp.float32).at[idx].set(val)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def wire_codec(comp: Compressor, use_pallas: bool = False) -> WireCodec:
+    """The WireCodec materializing `comp`'s payloads. Raises ValueError
+    for compressors with no static wire realization."""
+    base = comp.base if hasattr(comp, "base") else comp  # PerDimRatio
+    if isinstance(base, (TopK, RandomK)):
+        return SparseCodec(comp=comp, use_pallas=use_pallas)
+    if isinstance(base, (ThresholdV, AdaptiveThreshold)):
+        return SparseCodec(comp=comp, use_pallas=use_pallas,
+                           sim_exact=False)
+    if isinstance(comp, QSGD):
+        return QSGDCodec(comp=comp, use_pallas=use_pallas)
+    if isinstance(comp, TernGrad):
+        return TernGradCodec(comp=comp, use_pallas=use_pallas)
+    if isinstance(comp, SignSGD):
+        return SignSGDCodec(comp=comp, use_pallas=use_pallas)
+    if isinstance(comp, NaturalCompression):
+        return NaturalCodec(comp=comp, use_pallas=use_pallas)
+    if isinstance(comp, Identity) or comp.name in ("identity", "dense"):
+        return DenseCodec(comp=comp, use_pallas=use_pallas)
+    raise ValueError(f"no wire codec for compressor {comp.name!r}")
+
+
+def has_wire_codec(comp: Compressor) -> bool:
+    try:
+        wire_codec(comp)
+        return True
+    except ValueError:
+        return False
+
+
+# --------------------------------------------------------------------------
+# fused message buffers
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MessageLayout:
+    """Static byte layout of one fused wire message.
+
+    Buffer = header ++ per-bucket payload regions. The header is a uint32
+    table [n_buckets, byte_offset_0, ..., byte_offset_{B-1}] (absolute
+    offsets of each bucket's region), so a receiver can locate every
+    bucket from the buffer alone. `unit_nbytes[j]` is the per-unit
+    payload size of bucket j; its region holds n_units back-to-back
+    records.
+    """
+    bucket_ids: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    unit_nbytes: Tuple[int, ...]
+    header_nbytes: int
+    total_nbytes: int
+
+    @property
+    def payload_nbytes(self) -> int:
+        return self.total_nbytes - self.header_nbytes
+
+
+@functools.lru_cache(maxsize=256)
+def message_layouts(schedule, codec: WireCodec) -> Tuple[MessageLayout, ...]:
+    """Static layouts of every fused message of (schedule, codec)."""
+    plan = schedule.plan
+    outs = []
+    for msg in schedule.messages:
+        header = 4 * (1 + len(msg.bucket_ids))
+        off = header
+        offs, unb = [], []
+        for bi in msg.bucket_ids:
+            b = plan.buckets[bi]
+            nb = codec.nbytes(b.dim)
+            offs.append(off)
+            unb.append(nb)
+            off += b.n * nb
+        outs.append(MessageLayout(msg.bucket_ids, tuple(offs), tuple(unb),
+                                  header, off))
+    return tuple(outs)
+
+
+def _dispatch_encode(codec, b, x, keys, wire_key):
+    """One batched encode per bucket (mirrors UnitPlan._dispatch: same
+    key indexing, same n==1 short-circuit — the wire-vs-unpacked
+    bit-identity rests on this symmetry)."""
+    def enc(row, k):
+        return codec.encode(row, wire_key(k) if wire_key is not None else k)
+    kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
+    if b.n == 1:
+        return enc(x[0], kb[0])[None]
+    return jax.vmap(enc)(x, kb)
+
+
+def _dispatch_decode(codec, b, payload):
+    if b.n == 1:
+        return codec.decode(payload[0], b.dim)[None]
+    return jax.vmap(lambda p: codec.decode(p, b.dim))(payload)
+
+
+def _dispatch_post(fn, b, payload, xhat, keys):
+    kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
+    if b.n == 1:
+        return fn(payload[0], xhat[0], kb[0])[None]
+    return jax.vmap(fn)(payload, xhat, kb)
+
+
+def _message_buffer(layout: MessageLayout, payload_mats) -> Array:
+    header = jnp.asarray((len(layout.bucket_ids),) + layout.offsets,
+                         jnp.uint32)
+    return jnp.concatenate([_u32_to_u8(header)]
+                           + [p.reshape(-1) for p in payload_mats])
+
+
+def _bucket_region(buf: Array, layout: MessageLayout, j: int,
+                   n: int) -> Array:
+    off, nb = layout.offsets[j], layout.unit_nbytes[j]
+    return buf[off:off + n * nb].reshape(n, nb)
+
+
+def execute_schedule_wire(schedule, codec: WireCodec,
+                          fn: Optional[Callable], grads, key: Array,
+                          wire_key: Optional[Callable] = None):
+    """Stream a CommSchedule through REAL wire buffers.
+
+    Per message: encode every member bucket's units (per-unit plan keys,
+    optionally transformed by `wire_key` — e.g. the worker-key fold),
+    concatenate the packed payloads into one uint8 buffer behind the
+    header table, then decode each bucket back OUT OF the buffer and
+    apply `fn(payload_row, xhat_row, unit_key) -> y_row` (None = return
+    the decoded gradient). Messages are barrier-ordered on the previous
+    message's BUFFER, so the streaming contract is pinned on the actual
+    wire bytes. Returns (tree, buffers) — `8 * buf.size` summed over
+    `buffers` is the measured wire truth (headers included; per-payload
+    split via message_layouts).
+    """
+    from repro.core.schedule import _order_after
+    plan = schedule.plan
+    leaves = jax.tree_util.tree_leaves(grads)
+    flat = plan.flatten(grads) if plan.needs_flat else None
+    keys = plan.unit_keys(key)
+    out_leaves = [None] * len(leaves)
+    out_flat = (jnp.zeros((plan.exec_total,), jnp.float32)
+                if flat is not None else None)
+    layouts = message_layouts(schedule, codec)
+    buffers = []
+    token = None
+    for msg, layout in zip(schedule.messages, layouts):
+        xs = [plan._gather_runs(leaves, flat, plan.buckets[bi])
+              for bi in msg.bucket_ids]
+        xs = _order_after(xs, token)
+        mats = [_dispatch_encode(codec, plan.buckets[bi], x, keys, wire_key)
+                for bi, x in zip(msg.bucket_ids, xs)]
+        buf = _message_buffer(layout, mats)
+        buffers.append(buf)
+        token = buf
+        for j, bi in enumerate(msg.bucket_ids):
+            b = plan.buckets[bi]
+            pay = _bucket_region(buf, layout, j, b.n)
+            xhat = _dispatch_decode(codec, b, pay)
+            y = xhat if fn is None else _dispatch_post(fn, b, pay, xhat,
+                                                       keys)
+            out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)
+    return plan._assemble(out_leaves, out_flat), tuple(buffers)
+
+
+def execute_schedule_wire_with_state(schedule, codec: WireCodec,
+                                     fn: Optional[Callable], grads, state,
+                                     key: Array,
+                                     wire_key: Optional[Callable] = None):
+    """Error-feedback twin of execute_schedule_wire: per unit,
+    e = x + m is encoded, the residual m' = e - decode(payload) (exactly
+    the unpacked EF discipline since the round-trip is bit-exact), and
+    y = fn(payload, e_hat, key). Returns (tree, m_tree, buffers)."""
+    from repro.core.schedule import _order_after
+    plan = schedule.plan
+    leaves = jax.tree_util.tree_leaves(grads)
+    sleaves = jax.tree_util.tree_leaves(state)
+    need = plan.needs_flat
+    flat = plan.flatten(grads) if need else None
+    mflat = plan.flatten(state) if need else None
+    keys = plan.unit_keys(key)
+    out_leaves = [None] * len(leaves)
+    mout_leaves = [None] * len(leaves)
+    out_flat = (jnp.zeros((plan.exec_total,), jnp.float32) if need else None)
+    mout_flat = (jnp.zeros((plan.exec_total,), jnp.float32) if need
+                 else None)
+    layouts = message_layouts(schedule, codec)
+    buffers = []
+    token = None
+    for msg, layout in zip(schedule.messages, layouts):
+        pairs = []
+        for bi in msg.bucket_ids:
+            b = plan.buckets[bi]
+            pairs.append(plan._gather_runs(leaves, flat, b))
+            pairs.append(plan._gather_runs(sleaves, mflat, b))
+        pairs = _order_after(pairs, token)
+        es = [pairs[2 * j] + pairs[2 * j + 1]
+              for j in range(len(msg.bucket_ids))]
+        mats = [_dispatch_encode(codec, plan.buckets[bi], e, keys, wire_key)
+                for bi, e in zip(msg.bucket_ids, es)]
+        buf = _message_buffer(layout, mats)
+        buffers.append(buf)
+        token = buf
+        for j, bi in enumerate(msg.bucket_ids):
+            b = plan.buckets[bi]
+            pay = _bucket_region(buf, layout, j, b.n)
+            ehat = _dispatch_decode(codec, b, pay)
+            mn = es[j] - ehat
+            y = ehat if fn is None else _dispatch_post(fn, b, pay, ehat,
+                                                       keys)
+            out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)
+            mout_flat = plan._scatter_runs(mout_leaves, mout_flat, b, mn)
+    return (plan._assemble(out_leaves, out_flat),
+            plan._assemble(mout_leaves, mout_flat), tuple(buffers))

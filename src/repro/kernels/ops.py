@@ -194,6 +194,60 @@ def plan_compress(plan, grads, key: Array, kind: str = "qsgd", **kw):
     return plan.unflatten(out)
 
 
+# --------------------------------------------------------------------------
+# bit-vector <-> uint32-word packing (the wire codecs' hot inner loop)
+# --------------------------------------------------------------------------
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def pack_words(bits: Array, use_pallas: bool = False) -> Array:
+    """{0,1} int32 flat bit vector (n,) -> uint32 words (ceil(n/32),).
+
+    Bit i lands in word i//32 at position i%32 (little-endian bit order).
+    `use_pallas=False` (the default — safe under vmap, which is how wire
+    codecs run inside bucket dispatches) packs with the pure-jnp oracle;
+    `use_pallas=True` tiles to (rows, 512) and runs the kernels/pack.py
+    word-packing kernel.
+    """
+    n = bits.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    W = _cdiv(n, 32)
+    if use_pallas:
+        from repro.kernels.pack import PACK_C, PACK_R, pack_bits_pallas
+        rows = _cdiv(_cdiv(n, PACK_C), PACK_R) * PACK_R
+        bt = jnp.pad(bits.astype(jnp.int32),
+                     (0, rows * PACK_C - n)).reshape(rows, PACK_C)
+        words = pack_bits_pallas(bt, interpret=_interpret()).reshape(-1)
+    else:
+        pad = (-n) % 32
+        bt = jnp.pad(bits.astype(jnp.int32), (0, pad)).reshape(-1, 32)
+        words = ref.pack_bits_ref(bt).reshape(-1)
+    return words[:W]
+
+
+@partial(jax.jit, static_argnames=("n", "use_pallas"))
+def unpack_words(words: Array, n: int, use_pallas: bool = False) -> Array:
+    """uint32 words -> the first `n` bits as a {0,1} int32 vector.
+    Inverse of pack_words (same bit order, same pallas/jnp switch)."""
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if use_pallas:
+        from repro.kernels.pack import (PACK_R, WORDS_PER_ROW,
+                                        unpack_bits_pallas)
+        W = words.shape[0]
+        rows = _cdiv(_cdiv(W, WORDS_PER_ROW), PACK_R) * PACK_R
+        wt = jnp.pad(words, (0, rows * WORDS_PER_ROW - W)).reshape(
+            rows, WORDS_PER_ROW)
+        bits = unpack_bits_pallas(wt, interpret=_interpret()).reshape(-1)
+    else:
+        bits = ref.unpack_bits_ref(words.reshape(-1, 1)).reshape(-1)
+    return bits[:n]
+
+
 @partial(jax.jit, static_argnames=("eps", "use_pallas"))
 def rmsnorm(x: Array, gamma: Array, eps: float = 1e-5,
             use_pallas: bool = True) -> Array:

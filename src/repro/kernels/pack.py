@@ -1,0 +1,69 @@
+"""Pallas TPU kernels: bit-vector <-> uint32-word packing.
+
+The hot inner loop of every wire codec (core/wire.py) is turning a {0,1}
+bit stream into dense uint32 words and back — b-bit quantization levels,
+1-bit signs, index records all reduce to it. Pure VPU work: a (rows, 512)
+bit tile packs into (rows, 16) words per grid step via one weighted-sum
+reduction (bit i of a row lands in word i//32 at position i%32 —
+little-endian bit order, the layout `kernels/ref.pack_bits_ref` oracles
+and the jnp fallback reproduce bit for bit).
+
+Tiling: 512 bit columns (4 lane groups of 128) so the input side is
+lane-aligned; PACK_R rows per grid step. The 16-word output tile is
+narrower than one lane group — fine under interpret mode (this CPU
+container) and acceptable on TPU since the output is 32x smaller than the
+input stream it compresses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK_R = 8             # rows per grid step (sublane multiple)
+PACK_C = 512           # bit columns per row (lane multiple)
+WORDS_PER_ROW = PACK_C // 32
+
+
+def _pack_kernel(b_ref, o_ref):
+    b = b_ref[...]                                   # (R, 512) int32 {0,1}
+    rows = b.shape[0]
+    w = b.reshape(rows, WORDS_PER_ROW, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    o_ref[...] = (w * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def _unpack_kernel(w_ref, o_ref):
+    w = w_ref[...]                                   # (R, 16) uint32
+    rows = w.shape[0]
+    bits = (w[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    o_ref[...] = bits.reshape(rows, PACK_C).astype(jnp.int32)
+
+
+def pack_bits_pallas(bits: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(R, 512) {0,1} int32 with R % PACK_R == 0 -> (R, 16) uint32 words."""
+    R, C = bits.shape
+    assert R % PACK_R == 0 and C == PACK_C, (R, C)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(R // PACK_R,),
+        in_specs=[pl.BlockSpec((PACK_R, PACK_C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((PACK_R, WORDS_PER_ROW), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, WORDS_PER_ROW), jnp.uint32),
+        interpret=interpret,
+    )(bits)
+
+
+def unpack_bits_pallas(words: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """(R, 16) uint32 with R % PACK_R == 0 -> (R, 512) {0,1} int32."""
+    R, W = words.shape
+    assert R % PACK_R == 0 and W == WORDS_PER_ROW, (R, W)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(R // PACK_R,),
+        in_specs=[pl.BlockSpec((PACK_R, WORDS_PER_ROW), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((PACK_R, PACK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, PACK_C), jnp.int32),
+        interpret=interpret,
+    )(words)

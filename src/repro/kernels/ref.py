@@ -58,6 +58,26 @@ def topk_mask_ref(x: Array, k: int, iters: int = 24) -> Array:
     return x * keep.astype(x.dtype)
 
 
+def pack_bits_ref(bits: Array) -> Array:
+    """(R, C) {0,1} int32 with C % 32 == 0 -> (R, C//32) uint32 words.
+
+    Bit i of a row lands in word i//32 at position i%32 (little-endian bit
+    order) — the layout the pack Pallas kernel and every wire codec
+    (core/wire.py) share bit for bit.
+    """
+    R, C = bits.shape
+    w = bits.reshape(R, C // 32, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return (w * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits_ref(words: Array) -> Array:
+    """(R, W) uint32 -> (R, 32*W) {0,1} int32. Inverse of pack_bits_ref."""
+    R, W = words.shape
+    bits = (words[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    return bits.reshape(R, W * 32).astype(jnp.int32)
+
+
 def rmsnorm_ref(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
     """Row-wise RMSNorm (every arch's hot spot)."""
     ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)

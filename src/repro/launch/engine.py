@@ -230,13 +230,16 @@ class Engine:
 
     def _aggregate_grads(self, grads, key,
                          comp: Optional[CompressionConfig] = None,
-                         schedule=None):
+                         schedule=None, wire: bool = False):
         """Paper's Algorithm 1 over the DP axes, executed through the
         static UnitPlans (one batched compressor dispatch per unit size
         class — built once at jit-trace time, cached thereafter). With
         `schedule` (a CommSchedule for the rest plan) or comp.fusion_bytes
         set, the rest leaves stream through the backward-ordered fused
-        message schedule — bit-identical numerics."""
+        message schedule — bit-identical numerics. `wire=True`
+        materializes the rest leaves' worker compression as real
+        bit-packed message buffers (core.wire; the FSDP backward-hook
+        leaves are untouched — their Q_W runs inside the hook)."""
         model, dist = self.model, self.dist
         comp = comp if comp is not None else self.comp
         stacked = model.stacked()
@@ -248,7 +251,7 @@ class Engine:
             agg_rest, _ = compressed_allreduce(
                 g_rest, s_rest,
                 comp or CompressionConfig(strategy="dense"),
-                dist.dp, key, self.dp_size)
+                dist.dp, key, self.dp_size, wire=wire)
             return _merge(g_fsdp, agg_rest)
 
         rest_plan = build_plan(g_rest, s_rest, comp.granularity)
@@ -256,7 +259,7 @@ class Engine:
         agg_rest, _ = compressed_allreduce(g_rest, s_rest, comp, dist.dp,
                                            key, self.dp_size,
                                            plan=rest_plan,
-                                           schedule=schedule)
+                                           schedule=schedule, wire=wire)
         # fsdp leaves: Q_W already applied in the backward hook; grads are
         # scattered+averaged. Apply Q_M layer-wise (identical key on every
         # device -> consistent master compression).
@@ -273,7 +276,7 @@ class Engine:
                          comp: Optional[CompressionConfig] = None,
                          telemetry: bool = False,
                          telemetry_entire_model: bool = True,
-                         schedule=None):
+                         schedule=None, wire: bool = False):
         """The sharded, jitted train step.
 
         `comp` overrides the engine's CompressionConfig for THIS step
@@ -298,6 +301,11 @@ class Engine:
         the uniform 1/n_devices factor cancels.
         `telemetry_entire_model=False` drops the flat counterfactual
         compression pass (only GranularitySwitchPolicy reads it).
+        `wire=True` routes the DP gradient aggregation through REAL
+        bit-packed wire buffers (core.wire; requires a codec-bearing
+        worker compressor and the simulated/allgather strategy) —
+        bit-identical numerics, but every wire message is a materialized
+        uint8 buffer whose size*8 is the wire truth.
         """
         model, cfg, opt = self.model, self.cfg, self.opt
         dist = self.dist
@@ -348,7 +356,7 @@ class Engine:
                     lambda g: (g * jnp.asarray(inv, g.dtype)), grads)
                 loss = lsum * inv
             agg = self._aggregate_grads(grads, key, comp_eff,
-                                        schedule=schedule)
+                                        schedule=schedule, wire=wire)
             if telemetry:
                 qw = (comp_eff or CompressionConfig(strategy="dense")).qw
                 inc = measure(mplan, qw, grads, key, grads_hat=agg,
@@ -387,13 +395,19 @@ class Engine:
     # ------------------------------------------------------------------
     # inference steps
     # ------------------------------------------------------------------
-    def build_prefill(self, shape: InputShape):
+    def build_prefill(self, shape: InputShape, cache_len: int = None):
+        """The sharded prefill step. `cache_len` sizes the returned KV
+        cache beyond the prompt (generation slots for a following
+        decode loop — the serve launcher's path); default: prompt
+        length. Must be used instead of a bare jit(model.prefill): the
+        model's TP collectives only have their axes bound inside
+        shard_map."""
         model = self.model
         dpp = self._dpp(shape)
 
         def step_fn(params, batch):
             return model.prefill(params, batch, jax.random.key(0),
-                                 remat=self.remat)
+                                 remat=self.remat, cache_len=cache_len)
 
         pp = model.param_pspecs()
         bs = self.batch_pspecs(shape)

@@ -23,6 +23,28 @@ from repro.launch.mesh import make_host_mesh
 from repro.models.config import InputShape
 
 
+def pack_request(token, pos):
+    """Serving wire format: one decode request as a single uint8 buffer
+    — uint32 words [batch, pos, token_0, ..., token_{B-1}] bitcast to
+    bytes (little-endian, like the gradient wire codecs in core/wire.py).
+    The launcher round-trips its first decode request through it (outside
+    the timed region) and tests/test_serve.py holds the round-trip
+    bit-identical through a real decode step."""
+    b = token.shape[0]
+    words = jnp.concatenate([
+        jnp.asarray([b], jnp.uint32),
+        jnp.asarray(pos, jnp.uint32)[None],
+        token.astype(jnp.uint32)])
+    return jax.lax.bitcast_convert_type(words, jnp.uint8).reshape(-1)
+
+
+def unpack_request(buf):
+    """Inverse of pack_request -> {"token": int32[B], "pos": int32}."""
+    words = jax.lax.bitcast_convert_type(buf.reshape(-1, 4), jnp.uint32)
+    return {"token": words[2:].astype(jnp.int32),
+            "pos": words[1].astype(jnp.int32)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="granite-20b", choices=ARCH_NAMES)
@@ -43,6 +65,10 @@ def main(argv=None):
     cache_len = args.prompt + args.gen
     dshape = InputShape("serve", cache_len, args.batch, "decode")
     serve = eng.build_serve_step(dshape)
+    # the engine's shard_map'd prefill (a bare jit(model.prefill) has no
+    # bound TP axes), cache sized for the generation budget
+    pshape = InputShape("prefill", args.prompt, args.batch, "prefill")
+    prefill = eng.build_prefill(pshape, cache_len=cache_len)
 
     key = jax.random.key(args.seed)
     prompts = jax.random.randint(key, (args.batch, args.prompt), 0, cfg.vocab)
@@ -56,20 +82,20 @@ def main(argv=None):
 
     with mesh:
         t0 = time.time()
-        logits, cache = jax.jit(
-            lambda p, b: eng.model.prefill(p, b, jax.random.key(0),
-                                           cache_len=cache_len))(params,
-                                                                 batch)
+        logits, cache = prefill(params, batch)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         out = [tok]
         t_prefill = time.time() - t0
+        # exercise the serving wire format on the first request, OUTSIDE
+        # the timed region (the round-trip is measurement-neutral
+        # scaffolding; tests/test_serve.py holds its bit-identity)
+        req = unpack_request(pack_request(tok, jnp.int32(args.prompt)))
         t0 = time.time()
         for t in range(args.gen - 1):
-            logits, cache = serve(params, {"token": tok,
-                                           "pos": jnp.int32(args.prompt + t)},
-                                  cache)
+            logits, cache = serve(params, req, cache)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             out.append(tok)
+            req = {"token": tok, "pos": jnp.int32(args.prompt + t + 1)}
         gen = jnp.stack(out, axis=1)
         t_decode = time.time() - t0
     print(f"arch={cfg.name} mesh={dict(eng.sizes)} batch={args.batch}")

@@ -87,6 +87,12 @@ def main(argv=None):
     ap.add_argument("--alpha-us", type=float, default=50.0,
                     help="per-message link latency for the fusion policy "
                          "and the modeled comm report")
+    ap.add_argument("--wire", action="store_true",
+                    help="materialize compression as real bit-packed wire "
+                         "payloads (core.wire): every message is an actual "
+                         "uint8 buffer, bit-identical numerics; prints "
+                         "accounted vs measured wire bits (static path "
+                         "only — not combined with --policy)")
     ap.add_argument("--policy", default=None, choices=list(POLICIES),
                     help="adaptive compression policy; routes the run "
                          "through the control.Controller (default: the "
@@ -118,8 +124,10 @@ def main(argv=None):
     opt = OptConfig(name=args.optimizer, lr=args.lr, nesterov=args.nesterov)
     eng = Engine(cfg, mesh, comp=comp, opt=opt)
     sched = piecewise_linear(args.lr, args.steps, max(1, args.steps // 10))
+    if args.wire and args.policy:
+        ap.error("--wire is the static engine path; drop --policy")
     ctrl = build_controller(args, eng, sched) if args.policy else None
-    step_fn = None if ctrl else eng.build_train_step(sched)
+    step_fn = None if ctrl else eng.build_train_step(sched, wire=args.wire)
     params, opt_state = eng.init_state(args.seed)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} params={n/1e6:.2f}M mesh={dict(eng.sizes)} "
@@ -133,6 +141,15 @@ def main(argv=None):
     for tag, p in (("dp", rest_plan), ("fsdp", fsdp_plan)):
         if p is not None:
             print(f"plan[{tag}]: {p.summary()}")
+    if args.wire and rest_plan is not None and comp.strategy != "dense":
+        # accounted vs measured wire bits of the active codec (the
+        # differential suite holds these equal modulo word padding)
+        from repro.core.wire import wire_codec
+        codec = wire_codec(comp.qw)
+        acct = sum(comp.qw.payload_bits(d) for d in rest_plan.unit_dims)
+        meas = sum(codec.wire_bits(d) for d in rest_plan.unit_dims)
+        print(f"wire[dp]: codec={codec.name} accounted={acct} bits "
+              f"measured={meas} bits (padding {meas - acct})")
     if args.fusion_bytes is not None and rest_plan is not None:
         from repro.launch.comm_sched import engine_schedule, schedule_report
         s = engine_schedule(eng, args.fusion_bytes)

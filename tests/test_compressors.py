@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import make_compressor, available_compressors
+from repro.core import index_bits, make_compressor, available_compressors
 from repro.core.theory import (check_unbiasedness, empirical_omega,
                                empirical_descent_alignment)
 
@@ -103,8 +103,14 @@ def test_payload_bits_sane():
     d = 10000
     assert make_compressor("signsgd").payload_bits(d) == d
     assert make_compressor("terngrad").payload_bits(d) == 2 * d + 32
-    assert make_compressor("topk", ratio=0.01).payload_bits(d) == 100 * 64
+    # sparse records: 32-bit value + dim-dependent index width
+    # (ceil(log2(10000)) = 14 bits — what the packed wire format uses)
+    assert index_bits(d) == 14
+    assert make_compressor("topk", ratio=0.01).payload_bits(d) == \
+        100 * (32 + 14)
     assert make_compressor("qsgd", levels=16).payload_bits(d) < 32 * d
+    assert index_bits(1) == 1 and index_bits(2) == 1 and index_bits(8) == 3
+    assert index_bits(9) == 4
 
 
 @settings(max_examples=25, deadline=None)

@@ -105,14 +105,18 @@ def test_telemetry_payload_bits_match_comm_report():
     qw = make_compressor("topk", ratio=0.1)
     cfg = CompressionConfig(qw=qw, granularity=Granularity("layerwise"),
                             strategy="allgather")
-    assert payload_bits_per_step(mplan, qw) == \
+    assert payload_bits_per_step(mplan, qw, measured=False) == \
         comm_report(cfg, mplan, 4).uplink_bits_per_worker
+    # the measured (real packed bytes) legs agree the same way
+    assert payload_bits_per_step(mplan, qw) == \
+        comm_report(cfg, mplan, 4, measured=True).uplink_bits_per_worker
 
     dec = CompressionDecision(qw=qw, granularity=Granularity("layerwise"),
                               strategy="allgather",
                               ratio_overrides=((8, 0.5), (128, 0.02)))
     rep = comm_report(dec, mplan, 4)
-    assert payload_bits_per_step(mplan, dec.to_config().qw) == \
+    assert payload_bits_per_step(mplan, dec.to_config().qw,
+                                 measured=False) == \
         rep.uplink_bits_per_worker
     assert rep.uplink_bits_per_worker != \
         comm_report(cfg, mplan, 4).uplink_bits_per_worker
@@ -198,7 +202,9 @@ def test_per_dim_ratio_compressor_semantics():
     y = jnp.arange(16.0) + 1.0
     # dim 16 -> base ratio 0.5 -> k=8 survivors
     assert int(jnp.sum(c.sim(y, KEY) != 0)) == 8
-    assert c.payload_bits(8) == 2 * 64 and c.payload_bits(16) == 8 * 64
+    # records are 32-bit value + ceil(log2(d))-bit index: 35 bits at
+    # d=8 (k=2), 36 bits at d=16 (k=8)
+    assert c.payload_bits(8) == 2 * 35 and c.payload_bits(16) == 8 * 36
 
 
 def test_shared_random_decision_ignores_ratio_overrides():

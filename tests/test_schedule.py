@@ -385,9 +385,11 @@ def test_comm_report_messages_and_alpha_hand_computed():
     """Regression against hand-computed values on a 3-unit partition:
     dims (8, 8, 4), Top-k ratio 0.5, allgather, 2 workers.
 
-      per-unit k = max(1, round(0.5*d)) -> (4, 4, 2); payload 64 bits/kept
-      uplink   = (4+4+2)*64            = 640
-      downlink = (n-1)*uplink          = 640
+      per-unit k = max(1, round(0.5*d)) -> (4, 4, 2)
+      record = 32-bit value + ceil(log2(d))-bit index (the packed wire
+      format's dim-dependent index width): 35 bits at d=8, 34 at d=4
+      uplink   = 4*35 + 4*35 + 2*34     = 348
+      downlink = (n-1)*uplink           = 348
       unscheduled: one message per unit -> 3; alpha=1000 -> latency 3000
       fully fused:  one message         -> 1; alpha=1000 -> latency 1000
     """
@@ -401,11 +403,11 @@ def test_comm_report_messages_and_alpha_hand_computed():
 
     cfg = CompressionConfig(qw=qw, granularity=g, strategy="allgather")
     rep = comm_report(cfg, plan, 2, alpha_bits_per_message=1000)
-    assert rep.uplink_bits_per_worker == 640
-    assert rep.downlink_bits_per_worker == 640
+    assert rep.uplink_bits_per_worker == 348
+    assert rep.downlink_bits_per_worker == 348
     assert rep.n_messages == 3
     assert rep.latency_bits() == 3000
-    assert rep.total_bits_with_latency() == 640 + 640 + 3000
+    assert rep.total_bits_with_latency() == 348 + 348 + 3000
     assert rep.dense_bits == 2 * 32 * 20
 
     fused = CompressionConfig(qw=qw, granularity=g, strategy="allgather",
@@ -415,7 +417,7 @@ def test_comm_report_messages_and_alpha_hand_computed():
     assert repf.latency_bits() == 1000
     # payload (beta) terms are schedule-independent
     assert repf.uplink_bits_per_worker == rep.uplink_bits_per_worker
-    assert repf.total_bits_with_latency() == 640 + 640 + 1000
+    assert repf.total_bits_with_latency() == 348 + 348 + 1000
     # entire-model vs layerwise vs fused layerwise are now distinguishable
     em = comm_report(
         CompressionConfig(qw=qw, granularity=Granularity("entire_model"),
@@ -424,8 +426,9 @@ def test_comm_report_messages_and_alpha_hand_computed():
         alpha_bits_per_message=1000)
     assert em.n_messages == 1
     assert (em.n_messages, rep.n_messages, repf.n_messages) == (1, 3, 1)
-    # payload alone ties here (k sums coincide at ratio 0.5) — the alpha
-    # line is exactly what separates the three configurations
+    # entire-model pays WIDER indices (5 bits at d=20 -> 10*37 = 370
+    # uplink vs layerwise's 348) but one alpha; latency dominates here
+    assert em.uplink_bits_per_worker == 370
     assert em.total_bits_with_latency() < rep.total_bits_with_latency()
 
 
