@@ -51,5 +51,13 @@ bench-wire: bench-guard
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
 	  "from benchmarks.microbench import wire; wire()"
 
+# Just the fused-kernel traffic benchmark (per-codec encode/decode bytes
+# moved + measured pallas dispatch counts, jnp vs fused single-launch)
+# -> BENCH_kernels.json. Deterministic counts, no wall clocks; clean-tree
+# guarded like every BENCH artifact.
+bench-kernels: bench-guard
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
+	  "from benchmarks.microbench import kernels_bench; kernels_bench()"
+
 .PHONY: verify verify-fast bench bench-guard bench-unitplan \
-	bench-controller bench-schedule bench-wire
+	bench-controller bench-schedule bench-wire bench-kernels

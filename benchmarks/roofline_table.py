@@ -1,4 +1,5 @@
-"""Render the roofline table from dry-run artifacts (deliverable g)."""
+"""Render the roofline table from dry-run artifacts (deliverable g),
+plus the fused-kernel traffic rows from BENCH_kernels.json."""
 from __future__ import annotations
 
 import glob
@@ -36,5 +37,43 @@ def render(art_dir: str = "artifacts/dryrun_baseline2"):
     return rows
 
 
+KERNEL_HEADERS = ("codec", "op", "path", "passes", "bytes/elt",
+                  "launches")
+
+
+def render_kernels(bench_path: str = "BENCH_kernels.json"):
+    """CSV of the per-codec wire-kernel memory traffic (fused single
+    launch vs legacy three-pass) recorded by benchmarks.microbench
+    .kernels_bench — the kernel-level rows of the roofline story:
+    bytes/elt is the roofline's traffic axis, deterministic on any
+    container. Silently skips when the artifact is absent (run
+    `make bench-kernels` first)."""
+    if not os.path.exists(bench_path):
+        print(f"# {bench_path} not found — run `make bench-kernels`")
+        return []
+    with open(bench_path) as fh:
+        d = json.load(fh)
+    rows = []
+    print(",".join(KERNEL_HEADERS))
+    for codec in sorted(k for k, v in d.items() if isinstance(v, dict)
+                        and "width_bits" in v):
+        for op in ("encode", "decode", "decode_ef"):
+            for path in ("fused", "legacy"):
+                s = d[codec][f"{op}_{path}"]
+                total = (s["read_bytes_per_elt"] + s["write_bytes_per_elt"]
+                         + s["intermediate_bytes_per_elt"])
+                rows.append((codec, op, path, s["passes_over_data"],
+                             total, s["launches_per_bucket"]))
+                print(f"{codec},{op},{path},{s['passes_over_data']},"
+                      f"{total:.4f},{s['launches_per_bucket']}")
+    mv = d.get("majority_vote")
+    if mv:
+        print(f"signsgd,majority_vote,packed_words,1,"
+              f"{mv['read_bytes_per_word'] + mv['write_bytes_per_word']}"
+              f"B/word,{mv['launches']}")
+    return rows
+
+
 if __name__ == "__main__":
     render()
+    render_kernels()

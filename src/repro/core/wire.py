@@ -105,22 +105,41 @@ def _u8_to_u32(b: Array) -> Array:
     return jax.lax.bitcast_convert_type(b.reshape(-1, 4), jnp.uint32)
 
 
+def _f32_rows_to_u8(v: Array) -> Array:
+    """(n, k) f32 -> (n, 4k) uint8, row-wise little-endian bytes."""
+    return jax.lax.bitcast_convert_type(v, jnp.uint8).reshape(v.shape[0], -1)
+
+
+def _u32_rows_to_u8(w: Array) -> Array:
+    return jax.lax.bitcast_convert_type(w, jnp.uint8).reshape(w.shape[0], -1)
+
+
+def _u8_rows_to_f32(b: Array) -> Array:
+    """(n, 4k) uint8 -> (n, k) f32."""
+    return jax.lax.bitcast_convert_type(
+        b.reshape(b.shape[0], -1, 4), jnp.float32)
+
+
+def _u8_rows_to_u32(b: Array) -> Array:
+    return jax.lax.bitcast_convert_type(
+        b.reshape(b.shape[0], -1, 4), jnp.uint32)
+
+
 def _pack_fields(vals: Array, width: int, use_pallas: bool) -> Array:
     """int32 field vector (k,) with values < 2**width -> packed uint8
-    bytes (whole uint32 words; LSB-first within each field)."""
-    k = vals.shape[0]
-    bits = ((vals[:, None] >> jnp.arange(width, dtype=jnp.int32)) & 1)
-    words = ops.pack_words(bits.reshape(k * width), use_pallas=use_pallas)
-    return _u32_to_u8(words)
+    bytes (whole uint32 words; LSB-first within each field). Word-wise:
+    32-field chunks become `width` uint32 words via compile-time shifts
+    (kernels/ref.pack_fields_tile) — the legacy k*width {0,1} int32 bit
+    tensor (a 32x memory inflation) never exists. Byte-identical to the
+    bit-expansion path (ref.pack_fields_bitexpand_ref pins it)."""
+    return _u32_to_u8(ops.pack_fields(vals, width, use_pallas=use_pallas))
 
 
 def _unpack_fields(payload: Array, k: int, width: int,
                    use_pallas: bool) -> Array:
-    """Inverse of _pack_fields -> int32 (k,)."""
-    bits = ops.unpack_words(_u8_to_u32(payload), k * width,
-                            use_pallas=use_pallas)
-    weights = jnp.int32(1) << jnp.arange(width, dtype=jnp.int32)
-    return (bits.reshape(k, width) * weights).sum(axis=1).astype(jnp.int32)
+    """Inverse of _pack_fields -> int32 (k,), word-wise shifts."""
+    return ops.unpack_fields(_u8_to_u32(payload), k, width,
+                             use_pallas=use_pallas)
 
 
 # --------------------------------------------------------------------------
@@ -140,11 +159,22 @@ class WireCodec:
     `use_pallas=True` routes the word-packing through kernels/pack.py
     (exercised on the non-vmapped entire-model path and in bench-wire).
 
+    `fused=True` (default) routes the BATCH entry points (encode_batch /
+    decode_batch / decode_ef_batch — what wire execution dispatches per
+    bucket) through the single-launch compress+pack ops of kernels/ops.py:
+    a whole bucket's quantize + word-pack is ONE kernel launch, uniforms
+    generated in-kernel, the {0,1} bit tensor never materialized — and
+    payloads stay BYTE-IDENTICAL to the legacy three-pass per-unit path
+    (the differential suite pins it). `fused=False` falls back to
+    vmapping the per-unit encode/decode, which remain the reference
+    implementations either way.
+
     `exact_sim`: decode(encode(x, key)) == comp.sim(x, key) bit for bit.
     True for every codec except the capacity-bounded threshold records.
     """
     comp: Compressor = Identity()
     use_pallas: bool = False
+    fused: bool = True
 
     exact_sim = True
 
@@ -174,6 +204,32 @@ class WireCodec:
     def roundtrip(self, x: Array, key: Array) -> Array:
         return self.decode(self.encode(x, key), x.shape[0])
 
+    # ---- batched wire (one bucket = one dispatch) ------------------------
+    # Base implementations mirror the legacy bucket dispatch exactly:
+    # n == 1 short-circuits the vmap (the wire-vs-unpacked bit-identity
+    # rests on this symmetry). Codecs with fused kernels override these
+    # with single-launch kernels/ops.py calls when self.fused.
+
+    def encode_batch(self, x2d: Array, keys: Array) -> Array:
+        """(n, d) units + per-unit keys -> (n, nbytes(d)) payload rows."""
+        if x2d.shape[0] == 1:
+            return self.encode(x2d[0], keys[0])[None]
+        return jax.vmap(self.encode)(x2d, keys)
+
+    def decode_batch(self, payloads: Array, d: int) -> Array:
+        """(n, nbytes(d)) payload rows -> (n, d) decoded units."""
+        if payloads.shape[0] == 1:
+            return self.decode(payloads[0], d)[None]
+        return jax.vmap(lambda p: self.decode(p, d))(payloads)
+
+    def decode_ef_batch(self, payloads: Array, e2d: Array, d: int):
+        """Decode + error-feedback residual: -> (xhat, m = e - xhat).
+        The residual subtract runs in the caller's regime on every path
+        (kernels/ops.py *_unpack_ef_units explains why it cannot live
+        in-kernel), so fused and legacy residuals are bit-identical."""
+        xhat = self.decode_batch(payloads, d)
+        return xhat, e2d - xhat
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseCodec(WireCodec):
@@ -187,6 +243,16 @@ class DenseCodec(WireCodec):
 
     def decode(self, payload: Array, d: int) -> Array:
         return _u8_to_f32(payload)
+
+    def encode_batch(self, x2d: Array, keys: Array) -> Array:
+        if not self.fused:
+            return super().encode_batch(x2d, keys)
+        return _f32_rows_to_u8(x2d.astype(jnp.float32))
+
+    def decode_batch(self, payloads: Array, d: int) -> Array:
+        if not self.fused:
+            return super().decode_batch(payloads, d)
+        return _u8_rows_to_f32(payloads)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +281,36 @@ class QSGDCodec(WireCodec):
         q = codes - self.comp.levels
         return q.astype(jnp.float32) * (nrm / self.comp.levels)
 
+    def _split(self, payloads: Array):
+        """Payload rows -> ((n,) f32 norms, (n, words) uint32)."""
+        return (_u8_rows_to_f32(payloads[:, :4])[:, 0],
+                _u8_rows_to_u32(payloads[:, 4:]))
+
+    def encode_batch(self, x2d: Array, keys: Array) -> Array:
+        if not self.fused:
+            return super().encode_batch(x2d, keys)
+        w, nrm = ops.qsgd_pack_units(x2d, keys, self.comp.levels,
+                                     self.entry_bits,
+                                     use_pallas=self.use_pallas)
+        return jnp.concatenate(
+            [_f32_rows_to_u8(nrm[:, None]), _u32_rows_to_u8(w)], axis=1)
+
+    def decode_batch(self, payloads: Array, d: int) -> Array:
+        if not self.fused:
+            return super().decode_batch(payloads, d)
+        nrm, w = self._split(payloads)
+        return ops.qsgd_unpack_units(w, nrm, d, self.comp.levels,
+                                     self.entry_bits,
+                                     use_pallas=self.use_pallas)
+
+    def decode_ef_batch(self, payloads: Array, e2d: Array, d: int):
+        if not self.fused:
+            return super().decode_ef_batch(payloads, e2d, d)
+        nrm, w = self._split(payloads)
+        return ops.qsgd_unpack_ef_units(w, nrm, e2d, d, self.comp.levels,
+                                        self.entry_bits,
+                                        use_pallas=self.use_pallas)
+
 
 @dataclasses.dataclass(frozen=True)
 class TernGradCodec(WireCodec):
@@ -234,6 +330,32 @@ class TernGradCodec(WireCodec):
         s = _u8_to_f32(payload[:4])[0]
         t = _unpack_fields(payload[4:], d, 2, self.use_pallas) - 1
         return t.astype(jnp.float32) * s
+
+    def _split(self, payloads: Array):
+        return (_u8_rows_to_f32(payloads[:, :4])[:, 0],
+                _u8_rows_to_u32(payloads[:, 4:]))
+
+    def encode_batch(self, x2d: Array, keys: Array) -> Array:
+        if not self.fused:
+            return super().encode_batch(x2d, keys)
+        w, s = ops.terngrad_pack_units(x2d, keys,
+                                       use_pallas=self.use_pallas)
+        return jnp.concatenate(
+            [_f32_rows_to_u8(s[:, None]), _u32_rows_to_u8(w)], axis=1)
+
+    def decode_batch(self, payloads: Array, d: int) -> Array:
+        if not self.fused:
+            return super().decode_batch(payloads, d)
+        s, w = self._split(payloads)
+        return ops.terngrad_unpack_units(w, s, d,
+                                         use_pallas=self.use_pallas)
+
+    def decode_ef_batch(self, payloads: Array, e2d: Array, d: int):
+        if not self.fused:
+            return super().decode_ef_batch(payloads, e2d, d)
+        s, w = self._split(payloads)
+        return ops.terngrad_unpack_ef_units(w, s, e2d, d,
+                                            use_pallas=self.use_pallas)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,11 +377,36 @@ class SignSGDCodec(WireCodec):
                                 use_pallas=self.use_pallas)
         return (2 * bits - 1).astype(jnp.float32)
 
+    def encode_batch(self, x2d: Array, keys: Array) -> Array:
+        if not self.fused:
+            return super().encode_batch(x2d, keys)
+        return _u32_rows_to_u8(
+            ops.sign_pack_units(x2d, use_pallas=self.use_pallas))
+
+    def decode_batch(self, payloads: Array, d: int) -> Array:
+        if not self.fused:
+            return super().decode_batch(payloads, d)
+        return ops.sign_unpack_units(_u8_rows_to_u32(payloads), d,
+                                     use_pallas=self.use_pallas)
+
+    def decode_ef_batch(self, payloads: Array, e2d: Array, d: int):
+        if not self.fused:
+            return super().decode_ef_batch(payloads, e2d, d)
+        return ops.sign_unpack_ef_units(_u8_rows_to_u32(payloads), e2d, d,
+                                        use_pallas=self.use_pallas)
+
     def majority_vote(self, payloads: Array, d: int) -> Array:
         """(n_workers, nbytes) packed payloads -> one packed payload whose
         bit i is the majority sign of entry i (ties -> +1, matching the
-        x >= 0 convention). Never materializes dense worker vectors."""
+        x >= 0 convention). Never materializes dense worker vectors.
+        Fused: bit-sliced ripple-carry counting DIRECTLY on the packed
+        words (ops.majority_words) — even the per-bit counts stay packed;
+        zero word-padding bits vote 0 on both paths."""
         n = payloads.shape[0]
+        if self.fused:
+            maj = ops.majority_words(_u8_rows_to_u32(payloads),
+                                     use_pallas=self.use_pallas)
+            return _u32_to_u8(maj)
         bits = jax.vmap(lambda p: ops.unpack_words(
             _u8_to_u32(p), d, use_pallas=False))(payloads)
         maj = (2 * bits.sum(axis=0) >= n).astype(jnp.int32)
@@ -284,10 +431,39 @@ class NaturalCodec(WireCodec):
 
     def decode(self, payload: Array, d: int) -> Array:
         code = _unpack_fields(payload, d, 9, self.use_pallas) - 255
+        return self._dequant(code)
+
+    def _dequant(self, code: Array) -> Array:
+        """Elementwise code -> value (shape-polymorphic: same arithmetic
+        per unit or per bucket row)."""
         sgn = jnp.sign(code).astype(jnp.float32)
         e = jnp.abs(code) - (self.comp._BIAS + 1)
         val = sgn * jnp.exp2(e.astype(jnp.float32))
         return jnp.where(code == 0, 0.0, val)
+
+    def encode_batch(self, x2d: Array, keys: Array) -> Array:
+        if not self.fused:
+            return super().encode_batch(x2d, keys)
+
+        def codes_of(row, k):
+            e, sgn, zero = self.comp._exponents(
+                row.astype(jnp.float32), k)
+            bias = self.comp._BIAS + 1
+            return jnp.where(zero, 0,
+                             sgn.astype(jnp.int32) * (e + bias)) + 255
+        if x2d.shape[0] == 1:
+            codes = codes_of(x2d[0], keys[0])[None]
+        else:
+            codes = jax.vmap(codes_of)(x2d, keys)
+        return _u32_rows_to_u8(
+            ops.fields_pack_units(codes, 9, use_pallas=self.use_pallas))
+
+    def decode_batch(self, payloads: Array, d: int) -> Array:
+        if not self.fused:
+            return super().decode_batch(payloads, d)
+        codes = ops.fields_unpack_units(_u8_rows_to_u32(payloads), d, 9,
+                                        use_pallas=self.use_pallas)
+        return self._dequant(codes - 255)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -332,30 +508,66 @@ class SparseCodec(WireCodec):
                              self.use_pallas)
         return jnp.zeros((d,), jnp.float32).at[idx].set(val)
 
+    def encode_batch(self, x2d: Array, keys: Array) -> Array:
+        if not self.fused:
+            return super().encode_batch(x2d, keys)
+        d = x2d.shape[1]
+        c = self._c(d)
+
+        def records_of(row, k):
+            p = c.encode(row.reshape(-1).astype(jnp.float32), k)
+            return (p["val"].astype(jnp.float32),
+                    p["idx"].astype(jnp.int32))
+        if x2d.shape[0] == 1:
+            val, idx = records_of(x2d[0], keys[0])
+            val, idx = val[None], idx[None]
+        else:
+            val, idx = jax.vmap(records_of)(x2d, keys)
+        words = ops.fields_pack_units(idx, index_bits(d),
+                                      use_pallas=self.use_pallas)
+        return jnp.concatenate(
+            [_f32_rows_to_u8(val), _u32_rows_to_u8(words)], axis=1)
+
+    def decode_batch(self, payloads: Array, d: int) -> Array:
+        if not self.fused:
+            return super().decode_batch(payloads, d)
+        k = self._k(d)
+        val = _u8_rows_to_f32(payloads[:, :4 * k])
+        idx = ops.fields_unpack_units(_u8_rows_to_u32(payloads[:, 4 * k:]),
+                                      k, index_bits(d),
+                                      use_pallas=self.use_pallas)
+        scatter = lambda v, i: jnp.zeros((d,), jnp.float32).at[i].set(v)
+        if payloads.shape[0] == 1:
+            return scatter(val[0], idx[0])[None]
+        return jax.vmap(scatter)(val, idx)
+
 
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
 
-def wire_codec(comp: Compressor, use_pallas: bool = False) -> WireCodec:
+def wire_codec(comp: Compressor, use_pallas: bool = False,
+               fused: bool = True) -> WireCodec:
     """The WireCodec materializing `comp`'s payloads. Raises ValueError
-    for compressors with no static wire realization."""
+    for compressors with no static wire realization. `fused=True`
+    (default) routes the batch dispatches through the single-launch
+    compress+pack kernels; `fused=False` vmaps the per-unit reference."""
+    kw = dict(use_pallas=use_pallas, fused=fused)
     base = comp.base if hasattr(comp, "base") else comp  # PerDimRatio
     if isinstance(base, (TopK, RandomK)):
-        return SparseCodec(comp=comp, use_pallas=use_pallas)
+        return SparseCodec(comp=comp, **kw)
     if isinstance(base, (ThresholdV, AdaptiveThreshold)):
-        return SparseCodec(comp=comp, use_pallas=use_pallas,
-                           sim_exact=False)
+        return SparseCodec(comp=comp, sim_exact=False, **kw)
     if isinstance(comp, QSGD):
-        return QSGDCodec(comp=comp, use_pallas=use_pallas)
+        return QSGDCodec(comp=comp, **kw)
     if isinstance(comp, TernGrad):
-        return TernGradCodec(comp=comp, use_pallas=use_pallas)
+        return TernGradCodec(comp=comp, **kw)
     if isinstance(comp, SignSGD):
-        return SignSGDCodec(comp=comp, use_pallas=use_pallas)
+        return SignSGDCodec(comp=comp, **kw)
     if isinstance(comp, NaturalCompression):
-        return NaturalCodec(comp=comp, use_pallas=use_pallas)
+        return NaturalCodec(comp=comp, **kw)
     if isinstance(comp, Identity) or comp.name in ("identity", "dense"):
-        return DenseCodec(comp=comp, use_pallas=use_pallas)
+        return DenseCodec(comp=comp, **kw)
     raise ValueError(f"no wire codec for compressor {comp.name!r}")
 
 
@@ -414,21 +626,20 @@ def message_layouts(schedule, codec: WireCodec) -> Tuple[MessageLayout, ...]:
 
 
 def _dispatch_encode(codec, b, x, keys, wire_key):
-    """One batched encode per bucket (mirrors UnitPlan._dispatch: same
-    key indexing, same n==1 short-circuit — the wire-vs-unpacked
-    bit-identity rests on this symmetry)."""
-    def enc(row, k):
-        return codec.encode(row, wire_key(k) if wire_key is not None else k)
+    """One batched encode per bucket, via the codec's batch entry point
+    (fused: a single compress+pack kernel launch; legacy: the vmapped
+    per-unit reference with the n==1 short-circuit — the wire-vs-unpacked
+    bit-identity rests on that symmetry). The wire_key transform mirrors
+    the legacy placement: unvmapped for n == 1, vmapped otherwise."""
     kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
-    if b.n == 1:
-        return enc(x[0], kb[0])[None]
-    return jax.vmap(enc)(x, kb)
+    if wire_key is not None:
+        kb = (wire_key(kb[0])[None] if b.n == 1
+              else jax.vmap(wire_key)(kb))
+    return codec.encode_batch(x, kb)
 
 
 def _dispatch_decode(codec, b, payload):
-    if b.n == 1:
-        return codec.decode(payload[0], b.dim)[None]
-    return jax.vmap(lambda p: codec.decode(p, b.dim))(payload)
+    return codec.decode_batch(payload, b.dim)
 
 
 def _dispatch_post(fn, b, payload, xhat, keys):
@@ -504,7 +715,10 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
     """Error-feedback twin of execute_schedule_wire: per unit,
     e = x + m is encoded, the residual m' = e - decode(payload) (exactly
     the unpacked EF discipline since the round-trip is bit-exact), and
-    y = fn(payload, e_hat, key). Returns (tree, m_tree, buffers)."""
+    y = fn(payload, e_hat, key). Decode and residual thread through
+    codec.decode_ef_batch — with a fused codec that is ONE unpack kernel
+    launch per bucket plus the caller-regime residual subtract. Returns
+    (tree, m_tree, buffers)."""
     from repro.core.schedule import _order_after
     plan = schedule.plan
     leaves = jax.tree_util.tree_leaves(grads)
@@ -538,8 +752,7 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
         for j, bi in enumerate(msg.bucket_ids):
             b = plan.buckets[bi]
             pay = _bucket_region(buf, layout, j, b.n)
-            ehat = _dispatch_decode(codec, b, pay)
-            mn = es[j] - ehat
+            ehat, mn = codec.decode_ef_batch(pay, es[j], b.dim)
             y = ehat if fn is None else _dispatch_post(fn, b, pay, ehat,
                                                        keys)
             out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)

@@ -16,9 +16,13 @@ input stream it compresses.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import ref
 
 PACK_R = 8             # rows per grid step (sublane multiple)
 PACK_C = 512           # bit columns per row (lane multiple)
@@ -63,6 +67,58 @@ def unpack_bits_pallas(words: jax.Array, *,
         _unpack_kernel,
         grid=(R // PACK_R,),
         in_specs=[pl.BlockSpec((PACK_R, WORDS_PER_ROW), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((PACK_R, PACK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, PACK_C), jnp.int32),
+        interpret=interpret,
+    )(words)
+
+
+# --------------------------------------------------------------------------
+# width-parametric field packing: (R, 512) int32 width-bit fields ->
+# (R, 16*width) uint32 words in ONE launch (no {0,1} bit intermediate —
+# each 32-field chunk becomes exactly `width` words with compile-time
+# shifts, see kernels/ref.pack_fields_tile). This is the single-launch
+# pack leg the natural (9-bit) and sparse-index (ceil(log2 d)-bit) codecs
+# use; qsgd/terngrad/sign fuse their quantizers in front of the same tile
+# packer (kernels/{qsgd,terngrad,sign}.py).
+# --------------------------------------------------------------------------
+
+def _fields_pack_kernel(f_ref, o_ref, *, width: int):
+    o_ref[...] = ref.pack_fields_tile(f_ref[...], width)
+
+
+def _fields_unpack_kernel(w_ref, o_ref, *, width: int):
+    o_ref[...] = ref.unpack_fields_tile(w_ref[...], width)
+
+
+def fields_pack_pallas(fields: jax.Array, width: int, *,
+                       interpret: bool = True) -> jax.Array:
+    """(R, 512) int32 fields (values < 2**width; R % PACK_R == 0) ->
+    (R, 16*width) uint32 words."""
+    R, C = fields.shape
+    assert R % PACK_R == 0 and C == PACK_C, (R, C)
+    wpr = (C // 32) * width
+    return pl.pallas_call(
+        functools.partial(_fields_pack_kernel, width=width),
+        grid=(R // PACK_R,),
+        in_specs=[pl.BlockSpec((PACK_R, PACK_C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((PACK_R, wpr), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, wpr), jnp.uint32),
+        interpret=interpret,
+    )(fields)
+
+
+def fields_unpack_pallas(words: jax.Array, width: int, *,
+                         interpret: bool = True) -> jax.Array:
+    """(R, 16*width) uint32 -> (R, 512) int32 fields. Inverse of
+    fields_pack_pallas."""
+    R, W = words.shape
+    wpr = (PACK_C // 32) * width
+    assert R % PACK_R == 0 and W == wpr, (R, W, width)
+    return pl.pallas_call(
+        functools.partial(_fields_unpack_kernel, width=width),
+        grid=(R // PACK_R,),
+        in_specs=[pl.BlockSpec((PACK_R, wpr), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((PACK_R, PACK_C), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, PACK_C), jnp.int32),
         interpret=interpret,

@@ -1,0 +1,82 @@
+"""Elementwise threefry2x32 — jax.random.uniform, reproduced in-kernel.
+
+The fused compress+pack kernels must draw the SAME stochastic-rounding
+uniforms as `Compressor._quantize` (which calls jax.random.uniform /
+jax.random.bernoulli) or their payloads stop being byte-identical to the
+legacy three-pass wire path. jax.random can't be called inside a Pallas
+kernel body, but its threefry2x32 generator is 20 rounds of uint32
+add/xor/rotate — pure VPU work — so we reproduce it here as elementwise
+jnp ops usable both inside kernel bodies and as a jit-able oracle.
+
+`uniform_at(k0, k1, pos, n)` returns `jax.random.uniform(key, (n,))[pos]`
+BIT-exactly (tests/test_fused_kernels.py pins this against jax itself,
+so a jax upgrade that changes the generator fails loudly instead of
+silently corrupting payload identity). The positional form is what a
+tiled kernel needs: each (row, lane) knows its flat position inside the
+compression unit and evaluates only its own counter pair.
+
+Counter layout (jax's non-partitionable threefry path): a length-n draw
+evaluates threefry2x32(key, [0..n-1] zero-padded to even length, split
+into half-arrays x1/x2), so position p < h := ceil(n/2) is output word 0
+of the pair (p, p+h) — with the odd-n pad folding the last x2 slot to 0
+— and position p >= h is output word 1 of the pair (p-h, p).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = np.uint32(0x1BD11BDA)
+_ONE_F32 = np.uint32(0x3F800000)
+
+
+def _rotl(x: Array, r: int) -> Array:
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def threefry2x32(k0: Array, k1: Array, x0: Array, x1: Array):
+    """20-round threefry2x32 on broadcastable uint32 arrays — the exact
+    arithmetic of jax's threefry2x32 primitive."""
+    ks = (k0, k1, k0 ^ k1 ^ _PARITY)
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r) ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + np.uint32(i + 1)
+    return x0, x1
+
+
+def random_bits_at(k0: Array, k1: Array, pos: Array, n: int) -> Array:
+    """Bits of jax.random.bits(key, (n,))[pos] for uint32 keys (k0, k1).
+
+    `pos` int32/uint32, any shape (values >= n are computed but
+    meaningless — mask them downstream); `n` the static draw length.
+    """
+    p = pos.astype(jnp.uint32)
+    h = np.uint32((n + 1) // 2)
+    first = p < h
+    j = jnp.where(first, p, p - h)
+    # the odd-n zero pad occupies the last x2 slot
+    x2 = jnp.where(h + j < np.uint32(n), h + j, np.uint32(0))
+    o1, o2 = threefry2x32(k0, k1, j, x2)
+    return jnp.where(first, o1, o2)
+
+
+def bits_to_uniform(bits: Array) -> Array:
+    """uint32 bits -> f32 uniforms in [0, 1), jax.random.uniform's exact
+    mantissa construction: (bits >> 9 | 0x3F800000) as float, minus 1."""
+    fb = (bits >> np.uint32(9)) | _ONE_F32
+    u = jax.lax.bitcast_convert_type(fb, jnp.float32) - 1.0
+    return jnp.maximum(jnp.float32(0.0), u)
+
+
+def uniform_at(k0: Array, k1: Array, pos: Array, n: int) -> Array:
+    """jax.random.uniform(key, (n,))[pos], bit for bit, elementwise."""
+    return bits_to_uniform(random_bits_at(k0, k1, pos, n))

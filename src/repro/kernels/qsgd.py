@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused QSGD quantize + dequantize.
+"""Pallas TPU kernels: fused QSGD quantize + dequantize, and the fused
+single-launch quantize+PACK wire kernels.
 
 Elementwise + per-element stochastic rounding — pure VPU work. The unit
 norm (layer-wise or entire-model, per the paper's granularity) is computed
@@ -8,6 +9,26 @@ exactly the paper's subject.
 
 Tiling: the flat gradient is reshaped to (rows, 128·LANES) and the grid
 walks row-blocks of 8·SUBLANES — (8,128)-aligned VMEM tiles.
+
+The `qsgd_pack_pallas_rows` / `qsgd_unpack_pallas_rows` family is
+the wire hot path: ONE launch turns a whole UnitPlan bucket's gradient
+tile into packed uint32 payload words (and back). Per element the pack
+kernel reads 1 f32 and writes width/32 of a uint32 word — nothing else
+touches memory: the stochastic-rounding uniforms are generated
+IN-KERNEL from per-row threefry key columns (kernels/prng.py, bit-exact
+to the jax.random.uniform draw of Compressor._quantize, so payloads stay
+byte-identical to the legacy three-pass path), and the {0,1} bit tensor
+of the old quantize -> bit-expand -> word-pack pipeline never exists
+(kernels/ref.pack_fields_tile packs 32-field chunks with compile-time
+shifts).
+
+The error-feedback residual m = e - decode(words) deliberately does NOT
+live in the unpack kernel: on the CPU backend LLVM's fp-contraction
+fuses an in-kernel multiply+subtract into an FMA through every JAX-level
+barrier (lax.optimization_barrier, bitcast laundering, fast-math flags —
+all verified ineffective), which changes the residual's low bits versus
+the two-step rounding the wire EF discipline is pinned to. ops.py forms
+the residual in the caller's regime instead (see qsgd_unpack_ef_units).
 """
 from __future__ import annotations
 
@@ -16,6 +37,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import prng, ref
+from repro.kernels.pack import PACK_R
 
 BLOCK_R = 256          # rows per grid step (multiple of 8)
 BLOCK_C = 512          # lane columns (multiple of 128)
@@ -64,6 +88,86 @@ def qsgd_pallas_rows(x: jax.Array, noise: jax.Array, norms: jax.Array,
         out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
         interpret=interpret,
     )(x, noise, norms)
+
+
+# --------------------------------------------------------------------------
+# fused single-launch quantize + word-pack (the wire encode hot path)
+# --------------------------------------------------------------------------
+
+def _row_positions(block_shape, rpu: int):
+    """Flat position of every (row, lane) inside its compression unit: a
+    unit spans `rpu` consecutive tile rows of BLOCK_C lanes."""
+    R, C = block_shape
+    row = pl.program_id(0) * R + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (R, C), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+    return (row % rpu) * C + col
+
+
+def _qsgd_pack_kernel(x_ref, k0_ref, k1_ref, nrm_ref, o_ref, *,
+                      levels: int, width: int, d: int, rpu: int):
+    x = x_ref[...]                                   # (R, 512) f32
+    pos = _row_positions(x.shape, rpu)
+    u = prng.uniform_at(k0_ref[...], k1_ref[...], pos, d)
+    codes = ref.qsgd_codes_ref(x, u, nrm_ref[...], levels)
+    codes = jnp.where(pos < d, codes, 0)             # zero word padding
+    o_ref[...] = ref.pack_fields_tile(codes, width)
+
+
+def _qsgd_unpack_kernel(w_ref, fac_ref, o_ref, *, levels: int, width: int):
+    codes = ref.unpack_fields_tile(w_ref[...], width)
+    o_ref[...] = ref.qsgd_decode_ref(codes, fac_ref[...], levels)
+
+
+def qsgd_pack_pallas_rows(x: jax.Array, k0: jax.Array, k1: jax.Array,
+                          nrms: jax.Array, levels: int, width: int, *,
+                          d: int, rpu: int,
+                          interpret: bool = True) -> jax.Array:
+    """Fused quantize+pack over a bucket tile: x (R, 512) f32 with
+    R % PACK_R == 0 (units of dim `d` spanning `rpu` rows each), per-row
+    threefry key columns k0/k1 (R, 1) uint32 and unit norms nrms (R, 1)
+    f32 (+1e-12 already added) -> (R, 16*width) uint32 payload words.
+    ONE launch, 1 f32 read + 1 packed-word write per element."""
+    R, C = x.shape
+    assert R % PACK_R == 0 and C == BLOCK_C, (R, C)
+    assert k0.shape == k1.shape == nrms.shape == (R, 1)
+    wpr = (C // 32) * width
+    return pl.pallas_call(
+        functools.partial(_qsgd_pack_kernel, levels=levels, width=width,
+                          d=d, rpu=rpu),
+        grid=(R // PACK_R,),
+        in_specs=[
+            pl.BlockSpec((PACK_R, C), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((PACK_R, wpr), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, wpr), jnp.uint32),
+        interpret=interpret,
+    )(x, k0, k1, nrms)
+
+
+def qsgd_unpack_pallas_rows(words: jax.Array, facs: jax.Array, levels: int,
+                            width: int, *,
+                            interpret: bool = True) -> jax.Array:
+    """Fused unpack+dequantize: words (R, 16*width) uint32 + per-row
+    dequant factors facs = norm/levels (R, 1), division done by the
+    CALLER (see ref.qsgd_decode_ref) -> (R, 512) f32."""
+    R, W = words.shape
+    wpr = (BLOCK_C // 32) * width
+    assert R % PACK_R == 0 and W == wpr, (R, W, width)
+    return pl.pallas_call(
+        functools.partial(_qsgd_unpack_kernel, levels=levels, width=width),
+        grid=(R // PACK_R,),
+        in_specs=[
+            pl.BlockSpec((PACK_R, wpr), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((PACK_R, BLOCK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, BLOCK_C), jnp.float32),
+        interpret=interpret,
+    )(words, facs)
 
 
 def qsgd_pallas(x: jax.Array, noise: jax.Array, norm: jax.Array,

@@ -58,6 +58,140 @@ def topk_mask_ref(x: Array, k: int, iters: int = 24) -> Array:
     return x * keep.astype(x.dtype)
 
 
+# --------------------------------------------------------------------------
+# quantize-to-codes oracles (the integer field streams the wire packs).
+# Byte-identity contract: given the same uniforms as Compressor._quantize
+# (jax.random.uniform / bernoulli — see kernels/prng.py), these produce the
+# exact offset-binary codes the legacy three-pass wire path packs.
+# --------------------------------------------------------------------------
+
+def qsgd_codes_ref(x: Array, u: Array, nrm: Array, levels: int) -> Array:
+    """QSGD offset-binary codes in [0, 2*levels]: stochastic-round
+    |x|/nrm*levels with uniform u, then sign*level + levels. `nrm` is the
+    unit l2 norm WITH the compressor's +1e-12 already added (broadcasts:
+    scalar or per-row column)."""
+    y = jnp.abs(x) / nrm * levels
+    lo = jnp.floor(y)
+    lev = lo + (u < (y - lo)).astype(y.dtype)
+    return (jnp.sign(x) * lev).astype(jnp.int32) + levels
+
+
+def terngrad_codes_ref(x: Array, u: Array, scale: Array) -> Array:
+    """TernGrad codes in {0, 1, 2}: sign(x)*Bernoulli(|x|/scale) + 1.
+    `scale` is max|x| WITH the compressor's +1e-12 already added."""
+    b = (u < jnp.abs(x) / scale).astype(jnp.int32)
+    return jnp.sign(x).astype(jnp.int32) * b + 1
+
+
+def sign_codes_ref(x: Array) -> Array:
+    """signSGD 1-bit codes: x >= 0."""
+    return (x >= 0).astype(jnp.int32)
+
+
+def qsgd_decode_ref(codes: Array, fac: Array, levels: int) -> Array:
+    """Inverse of qsgd_codes_ref: (codes - levels) * fac where
+    fac = nrm / levels is precomputed in the CALLER's compilation regime.
+    (XLA strength-reduces division by a compile-time constant, so a
+    kernel-side nrm / levels would not be bit-identical to the codec's
+    eager dequant; the in-kernel multiply is a single exact IEEE op.)"""
+    return (codes - levels).astype(jnp.float32) * fac
+
+
+def terngrad_decode_ref(codes: Array, scale: Array) -> Array:
+    return (codes - 1).astype(jnp.float32) * scale
+
+
+def sign_decode_ref(codes: Array) -> Array:
+    return (2 * codes - 1).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# word-wise field packing: chunks of 32 width-bit fields -> exactly `width`
+# uint32 words, with compile-time shift constants. Every 32-field chunk
+# spans 32*width bits == width whole words, so ANY width packs without
+# cross-chunk straddle — the core trick that removes the {0,1} bit-tensor
+# (a 32x memory inflation) from both the jnp fallback and the kernels.
+# Shared by the Pallas kernel bodies (pure jnp => identical arithmetic).
+# --------------------------------------------------------------------------
+
+def pack_fields_tile(fields: Array, width: int) -> Array:
+    """(R, C) int32 fields with C % 32 == 0, values < 2**width ->
+    (R, C*width//32) uint32 words (little-endian bit order: field i's low
+    bit lands at bit-stream position i*width)."""
+    R, C = fields.shape
+    nc = C // 32
+    v = fields.reshape(R, nc, 32).astype(jnp.uint32)
+    words = []
+    for t in range(width):
+        w = jnp.zeros((R, nc), jnp.uint32)
+        for j in range(32):
+            lo, hi = j * width, (j + 1) * width      # field j's bit span
+            if hi <= 32 * t or lo >= 32 * (t + 1):   # no overlap w/ word t
+                continue
+            s = lo - 32 * t
+            f = v[:, :, j]
+            w = w | (f << jnp.uint32(s) if s >= 0 else f >> jnp.uint32(-s))
+        words.append(w)
+    return jnp.stack(words, axis=2).reshape(R, nc * width)
+
+
+def unpack_fields_tile(words: Array, width: int) -> Array:
+    """(R, nc*width) uint32 words -> (R, nc*32) int32 fields. Inverse of
+    pack_fields_tile."""
+    R, W = words.shape
+    nc = W // width
+    v = words.reshape(R, nc, width)
+    mask = jnp.uint32((1 << width) - 1)
+    fields = []
+    for j in range(32):
+        lo = j * width
+        t0, s = lo // 32, lo % 32
+        f = v[:, :, t0] >> jnp.uint32(s)
+        if lo + width > 32 * (t0 + 1):               # straddles into t0+1
+            f = f | (v[:, :, t0 + 1] << jnp.uint32(32 - s))
+        fields.append(f & mask)
+    return jnp.stack(fields, axis=2).reshape(R, nc * 32).astype(jnp.int32)
+
+
+def pack_fields_bitexpand_ref(vals: Array, width: int) -> Array:
+    """The PRE-FUSION packing path, kept verbatim as the byte-identity
+    oracle: expand each field to `width` {0,1} int32 bits (the 32x
+    intermediate the fused paths eliminate), then weighted-sum into
+    words. (k,) int32 -> (ceil(k*width/32),) uint32."""
+    k = vals.shape[0]
+    bits = ((vals[:, None] >> jnp.arange(width, dtype=jnp.int32)) & 1)
+    flat = bits.reshape(k * width)
+    pad = (-flat.shape[0]) % 32
+    b = jnp.pad(flat, (0, pad)).reshape(-1, 32)
+    return pack_bits_ref(b).reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# bit-sliced majority vote on packed sign words: per-bit-position counts
+# kept as word-wide bit PLANES (a ripple-carry adder over words), compared
+# against ceil(n/2) with a borrow chain — O(n log n) word ops, and no
+# {0,1} bit tensor ever exists. Ties resolve to +1 (2*count >= n), the
+# x >= 0 sign convention.
+# --------------------------------------------------------------------------
+
+def majority_words_ref(words: Array) -> Array:
+    """(n_workers, W) uint32 packed sign words -> (W,) majority words."""
+    n, _ = words.shape
+    planes = [jnp.zeros_like(words[0]) for _ in range(max(1, n.bit_length()))]
+    for i in range(n):
+        c = words[i]
+        for pi in range(len(planes)):                # ripple-carry add 1 bit
+            planes[pi], c = planes[pi] ^ c, planes[pi] & c
+    thr = (n + 1) // 2                               # 2*count >= n
+    borrow = jnp.zeros_like(words[0])
+    for pi, a in enumerate(planes):                  # borrow of count - thr
+        if (thr >> pi) & 1:
+            borrow = ~a | borrow
+        else:
+            borrow = ~a & borrow
+    return ~borrow                                   # count >= thr
+
+
 def pack_bits_ref(bits: Array) -> Array:
     """(R, C) {0,1} int32 with C % 32 == 0 -> (R, C//32) uint32 words.
 

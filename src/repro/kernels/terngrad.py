@@ -1,14 +1,28 @@
-"""Pallas TPU kernel: fused TernGrad quantize + dequantize.
+"""Pallas TPU kernel: fused TernGrad quantize + dequantize, and the fused
+single-launch ternarize+PACK wire kernels.
 
 out = scale · sign(x) · 1[u < |x|/scale], with the per-unit scale
 (max |x| over the compression unit) computed outside — same
 granularity-polymorphic design as the QSGD kernel.
+
+`terngrad_pack_pallas_rows` / `terngrad_unpack_pallas_rows` are the
+wire hot path: ONE launch per bucket turning gradient tiles into 2-bit
+codes packed as uint32 words (1 f32 read + 1/16 word write per element),
+Bernoulli draws generated in-kernel from per-row threefry key columns
+(kernels/prng.py — bit-exact to jax.random.bernoulli, so payloads stay
+byte-identical to the legacy three-pass path). See kernels/qsgd.py for
+the design notes; this module is its 2-bit mirror.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import prng, ref
+from repro.kernels.pack import PACK_R
 
 BLOCK_R = 256
 BLOCK_C = 512
@@ -50,6 +64,75 @@ def terngrad_pallas_rows(x: jax.Array, noise: jax.Array, scales: jax.Array,
         out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
         interpret=interpret,
     )(x, noise, scales)
+
+
+# --------------------------------------------------------------------------
+# fused single-launch ternarize + word-pack (the wire encode hot path)
+# --------------------------------------------------------------------------
+
+TERN_WIDTH = 2
+
+
+def _tern_pack_kernel(x_ref, k0_ref, k1_ref, s_ref, o_ref, *,
+                      d: int, rpu: int):
+    from repro.kernels.qsgd import _row_positions
+    x = x_ref[...]                                   # (R, 512) f32
+    pos = _row_positions(x.shape, rpu)
+    u = prng.uniform_at(k0_ref[...], k1_ref[...], pos, d)
+    codes = ref.terngrad_codes_ref(x, u, s_ref[...])
+    codes = jnp.where(pos < d, codes, 0)             # zero word padding
+    o_ref[...] = ref.pack_fields_tile(codes, TERN_WIDTH)
+
+
+def _tern_unpack_kernel(w_ref, s_ref, o_ref):
+    codes = ref.unpack_fields_tile(w_ref[...], TERN_WIDTH)
+    o_ref[...] = ref.terngrad_decode_ref(codes, s_ref[...])
+
+
+def terngrad_pack_pallas_rows(x: jax.Array, k0: jax.Array, k1: jax.Array,
+                              scales: jax.Array, *, d: int, rpu: int,
+                              interpret: bool = True) -> jax.Array:
+    """Fused ternarize+pack over a bucket tile: x (R, 512) f32 with
+    R % PACK_R == 0, per-row threefry key columns k0/k1 (R, 1) uint32 and
+    unit scales (max|x| + 1e-12 already added) scales (R, 1) f32 ->
+    (R, 32) uint32 payload words. ONE launch."""
+    R, C = x.shape
+    assert R % PACK_R == 0 and C == BLOCK_C, (R, C)
+    assert k0.shape == k1.shape == scales.shape == (R, 1)
+    wpr = (C // 32) * TERN_WIDTH
+    return pl.pallas_call(
+        functools.partial(_tern_pack_kernel, d=d, rpu=rpu),
+        grid=(R // PACK_R,),
+        in_specs=[
+            pl.BlockSpec((PACK_R, C), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((PACK_R, wpr), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, wpr), jnp.uint32),
+        interpret=interpret,
+    )(x, k0, k1, scales)
+
+
+def terngrad_unpack_pallas_rows(words: jax.Array, scales: jax.Array, *,
+                                interpret: bool = True) -> jax.Array:
+    """Fused unpack+dequantize: words (R, 32) uint32 + per-row payload
+    scales (R, 1) -> (R, 512) f32."""
+    R, W = words.shape
+    wpr = (BLOCK_C // 32) * TERN_WIDTH
+    assert R % PACK_R == 0 and W == wpr, (R, W)
+    return pl.pallas_call(
+        _tern_unpack_kernel,
+        grid=(R // PACK_R,),
+        in_specs=[
+            pl.BlockSpec((PACK_R, wpr), lambda i: (i, 0)),
+            pl.BlockSpec((PACK_R, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((PACK_R, BLOCK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, BLOCK_C), jnp.float32),
+        interpret=interpret,
+    )(words, scales)
 
 
 def terngrad_pallas(x: jax.Array, noise: jax.Array, scale: jax.Array,
