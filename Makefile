@@ -12,7 +12,7 @@ verify:
 # unmarked smoke subsets in the inner loop) — the inner-loop command.
 # Full `make verify` before shipping.
 verify-fast:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire and not obs"
 
 # Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan
 # dispatches, adaptive controller). Writes BENCH_unitplan.json and
@@ -59,5 +59,14 @@ bench-kernels: bench-guard
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
 	  "from benchmarks.microbench import kernels_bench; kernels_bench()"
 
+# Just the observability calibration benchmark (TraceRecorder-measured
+# exposed comm vs the alpha-beta model, default + per-host fitted
+# parameters) -> BENCH_obs.json. Wall-clock based by nature — trust the
+# counts/bytes and the RELATIVE ratio shape, not absolute us (the report
+# embeds the caveat). Clean-tree guarded like every BENCH artifact.
+bench-obs: bench-guard
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
+	  "from benchmarks.microbench import obs_bench; obs_bench()"
+
 .PHONY: verify verify-fast bench bench-guard bench-unitplan \
-	bench-controller bench-schedule bench-wire bench-kernels
+	bench-controller bench-schedule bench-wire bench-kernels bench-obs

@@ -74,6 +74,87 @@ def render_kernels(bench_path: str = "BENCH_kernels.json"):
     return rows
 
 
+SCHEDULE_HEADERS = ("config", "threshold", "n_messages", "wire_bits",
+                    "exposed_us_model", "exposed_us_measured",
+                    "model_error_ratio")
+
+
+def render_schedule(bench_path: str = "BENCH_schedule.json"):
+    """CSV of the per-config x fusion-threshold measured-vs-modeled
+    exposed-comm columns recorded by benchmarks.microbench.schedule.
+    The ratio column is TraceRecorder-measured stream wall over the
+    alpha-beta model's exposed prediction (single-process: nothing
+    overlaps, so treat the absolute ratios as host-local and read the
+    SHAPE across thresholds). Silently skips when the artifact is
+    absent (run `make bench-schedule` first)."""
+    if not os.path.exists(bench_path):
+        print(f"# {bench_path} not found — run `make bench-schedule`")
+        return []
+    with open(bench_path) as fh:
+        d = json.load(fh)
+    rows = []
+    print(",".join(SCHEDULE_HEADERS))
+    for cfg in sorted(d):
+        entry = d[cfg]
+        for label in ("per_bucket", "fused_64kib", "fused_1mib",
+                      "one_shot"):
+            t = entry.get(label)
+            if not isinstance(t, dict):
+                continue
+            meas = t.get("exposed_comm_us_measured", "")
+            ratio = t.get("model_error_ratio", "")
+            rows.append((cfg, label, t["n_messages"], t["wire_bits"],
+                         t["exposed_comm_us_model"], meas, ratio))
+            print(f"{cfg},{label},{t['n_messages']},{t['wire_bits']},"
+                  f"{t['exposed_comm_us_model']},{meas},{ratio}")
+    return rows
+
+
+OBS_HEADERS = ("config", "threshold", "n_messages", "wire_bytes",
+               "exposed_us_measured", "exposed_us_model",
+               "ratio_default", "ratio_fitted")
+
+
+def render_obs(bench_path: str = "BENCH_obs.json"):
+    """CSV of the calibration study (BENCH_obs.json): per config x
+    threshold, measured exposed comm vs the alpha-beta model under the
+    default and the per-host FITTED parameters, plus the fit itself.
+    Silently skips when the artifact is absent (run `make bench-obs`
+    first)."""
+    if not os.path.exists(bench_path):
+        print(f"# {bench_path} not found — run `make bench-obs`")
+        return []
+    with open(bench_path) as fh:
+        d = json.load(fh)
+    rows = []
+    print(",".join(OBS_HEADERS))
+    for cfg in sorted(d.get("configs", {})):
+        cal = d["configs"][cfg]
+        for label in ("per_bucket", "fused_64kib", "one_shot"):
+            t = cal["thresholds"].get(label)
+            if t is None:
+                continue
+            rows.append((cfg, label, t["n_messages"],
+                         t["wire_bytes_measured"],
+                         t["exposed_comm_us_measured"],
+                         t["exposed_comm_us_model"],
+                         t["model_error_ratio_default"],
+                         t["model_error_ratio_fitted"]))
+            print(f"{cfg},{label},{t['n_messages']},"
+                  f"{t['wire_bytes_measured']},"
+                  f"{t['exposed_comm_us_measured']},"
+                  f"{t['exposed_comm_us_model']},"
+                  f"{t['model_error_ratio_default']},"
+                  f"{t['model_error_ratio_fitted']}")
+        for host, fit in sorted(cal["fit_by_host"].items()):
+            print(f"# {cfg} host {host} fit: alpha_us={fit['alpha_us']} "
+                  f"gbps={fit['gbps']} n={fit['n_samples']} "
+                  f"resid_rms_us={fit['resid_rms_us']}")
+    return rows
+
+
 if __name__ == "__main__":
     render()
     render_kernels()
+    render_schedule()
+    render_obs()

@@ -21,12 +21,15 @@ for JSON export, and resets the window.
 """
 from __future__ import annotations
 
+import math
+import warnings
 from typing import Callable, Dict, List, Optional
 
 from repro.core.plan import UnitPlan
 
 from repro.control.policy import CompressionDecision, Policy
-from repro.control.telemetry import (TelemetryState, init_telemetry,
+from repro.control.telemetry import (TELEMETRY_SCHEMA_VERSION,
+                                     TelemetryState, init_telemetry,
                                      summarize, to_json)
 
 
@@ -35,12 +38,14 @@ class Controller:
                  base: CompressionDecision, mplan: UnitPlan, *,
                  replan_every: int = 20,
                  collect_telemetry: Optional[bool] = None,
-                 cache: Optional[dict] = None, cache_tag=None):
+                 cache: Optional[dict] = None, cache_tag=None,
+                 metrics=None):
         """`cache` may be shared between controllers (e.g. a sweep) — it
         is keyed on (decision, telemetry-enabled, cache_tag) so steps
         with different build shapes never collide; harnesses pass their
         extra build flags (e.g. the entire-model telemetry leg) as
-        `cache_tag`."""
+        `cache_tag`. `metrics` (duck-typed, obs.metrics.MetricsRegistry)
+        receives builds/switch/retrace counters."""
         self.policy = policy
         self.build_step = build_step
         self.mplan = mplan
@@ -52,7 +57,11 @@ class Controller:
             init_telemetry(mplan) if self.collect else None)
         self._cache = {} if cache is None else cache
         self._cache_tag = cache_tag
+        self.metrics = metrics
         self.builds = 0            # build_step invocations == retraces
+        self.retraces_unexpected = 0   # rebuilds of previously-built keys
+        self.jit_recompiles = 0    # extra jit signatures (informational)
+        self._built_keys: set = set()
         self.switches: List[Dict] = []
         self.windows: List[Dict] = []
 
@@ -64,9 +73,50 @@ class Controller:
     def _bundle(self, decision: CompressionDecision):
         key = (decision, self.collect, self._cache_tag)
         if key not in self._cache:
+            if key in self._built_keys:
+                # retrace watchdog: revisiting a cached decision must be
+                # a dict hit (the no-retrace acceptance property). A
+                # rebuild here means the shared cache was cleared or
+                # evicted behind our back — surface it, don't hide it.
+                self.retraces_unexpected += 1
+                if self.metrics is not None:
+                    self.metrics.inc("controller/retraces_unexpected")
+                warnings.warn(
+                    f"unexpected retrace: decision "
+                    f"{decision.describe()!r} was built before but is "
+                    f"missing from the step cache (cleared or evicted?) "
+                    f"— rebuilding", RuntimeWarning, stacklevel=3)
             self._cache[key] = self.build_step(decision)
             self.builds += 1
+            self._built_keys.add(key)
+            if self.metrics is not None:
+                self.metrics.inc("controller/builds")
         return self._cache[key]
+
+    def check_retraces(self) -> int:
+        """The watchdog's unexpected-recompile count (cache-evicted
+        rebuilds of previously-built decisions) — 0 on every healthy run
+        (the regression test's gate). Also probes each cached step's
+        jit for extra compiled signatures and stores the sum in
+        `self.jit_recompiles`: that leg is informational, NOT folded
+        into the return value, because one extra signature per step fn
+        is normal — the first optimized step re-specializes once on the
+        settled (donated) output shardings."""
+        extra = 0
+        for key in self._built_keys:
+            fn = self._cache.get(key)
+            size_fn = getattr(fn, "_cache_size", None)
+            if callable(size_fn):
+                try:
+                    extra += max(0, int(size_fn()) - 1)
+                except Exception:  # jax internals moved — skip the probe
+                    continue
+        self.jit_recompiles = extra
+        if self.metrics is not None:
+            self.metrics.gauge("controller/retraces_unexpected_total",
+                               self.retraces_unexpected)
+            self.metrics.gauge("controller/jit_recompiles", extra)
+        return self.retraces_unexpected
 
     def config(self):
         return self.decision.to_config()
@@ -98,22 +148,53 @@ class Controller:
                              "summary": summary})
         new = self.policy.decide(summary, self.decision, self.mplan)
         changed = new != self.decision
+        if self.metrics is not None:
+            self.metrics.inc("controller/replans")
         if changed:
             self.switches.append({"step": step_idx,
                                   "from": self.decision.describe(),
                                   "to": new.describe()})
             self.decision = new
+            if self.metrics is not None:
+                self.metrics.inc("controller/switches")
         if self.collect:  # fresh window per re-plan interval
             self.telemetry = init_telemetry(self.mplan)
         return changed
 
     # ---- export ----------------------------------------------------------
+    def active_decision(self) -> Dict:
+        """The current decision as a self-describing plain dict (the
+        `active` block of report()/--telemetry-out: policy name,
+        compressors, granularity, fusion_bytes, ratios) — joinable with
+        trace/metrics exports without parsing describe() strings."""
+        d = self.decision
+        fb = d.fusion_bytes
+        return {
+            "policy": self.policy.name,
+            "decision": d.describe(),
+            "granularity": d.granularity.kind,
+            "compressor": d.qw.name,
+            "master_compressor": d.qm.name,
+            "strategy": d.strategy,
+            "error_feedback": d.error_feedback,
+            "wire_dtype": d.wire_dtype,
+            "ratio": getattr(d.qw, "ratio", None),
+            "ratio_overrides": {str(dim): r
+                                for dim, r in d.ratio_overrides},
+            "fusion_bytes": (None if fb is None
+                             else "inf" if math.isinf(fb) else fb),
+        }
+
     def report(self) -> Dict:
         return {
+            "schema_version": TELEMETRY_SCHEMA_VERSION,
             "policy": self.policy.name,
             "replan_every": self.replan_every,
             "decision": self.decision.describe(),
+            "active": self.active_decision(),
             "builds": self.builds,
+            "retraces_unexpected": self.check_retraces(),
+            "jit_recompiles": self.jit_recompiles,
             "switches": self.switches,
             "windows": self.windows,
         }
@@ -126,11 +207,14 @@ def engine_controller(engine, policy: Policy, *, lr_schedule=None,
                       base: Optional[CompressionDecision] = None,
                       replan_every: int = 20,
                       collect_telemetry: Optional[bool] = None,
-                      cache: Optional[dict] = None) -> Controller:
+                      cache: Optional[dict] = None,
+                      metrics=None, tracer=None) -> Controller:
     """Controller over launch.engine.Engine's sharded train step. The
     step factory threads the decision's CompressionConfig (and, when
     telemetry is on, the TelemetryState leg) through
-    Engine.build_train_step."""
+    Engine.build_train_step. `metrics`/`tracer` (duck-typed obs
+    registry/recorder) instrument the built steps and the controller's
+    own counters."""
     from repro.core.aggregation import no_compression
     if base is None:
         base = CompressionDecision.from_config(
@@ -143,12 +227,14 @@ def engine_controller(engine, policy: Policy, *, lr_schedule=None,
         return engine.build_train_step(lr_schedule,
                                        comp=decision.to_config(),
                                        telemetry=collect,
-                                       telemetry_entire_model=em)
+                                       telemetry_entire_model=em,
+                                       tracer=tracer, metrics=metrics)
 
     # the tag carries every build input besides the decision, so a cache
     # shared across controllers never hands back a step compiled for a
-    # different engine/schedule/telemetry shape
+    # different engine/schedule/telemetry shape (the tracer embeds
+    # callbacks in the traced graph, so it is part of the build shape)
     return Controller(policy, build, base, engine.measurement_plan(),
                       replan_every=replan_every, collect_telemetry=collect,
-                      cache=cache,
-                      cache_tag=("engine", engine, lr_schedule, em))
+                      cache=cache, metrics=metrics,
+                      cache_tag=("engine", engine, lr_schedule, em, tracer))

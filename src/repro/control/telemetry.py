@@ -40,6 +40,10 @@ Array = jax.Array
 
 _EPS = 1e-30
 
+#: version stamp of the controller's exported JSON (report()/--telemetry-out).
+#: v2: added schema_version + the self-describing "active" decision block.
+TELEMETRY_SCHEMA_VERSION = 2
+
 
 class TelemetryState(NamedTuple):
     """Accumulated per-size-class statistics (a pytree of f32 arrays).

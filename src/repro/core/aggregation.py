@@ -266,7 +266,8 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                          schedule: Optional[CommSchedule] = None,
                          telemetry_plan: Optional[UnitPlan] = None,
                          telemetry_entire_model: bool = True,
-                         wire: bool = False):
+                         wire: bool = False,
+                         recorder=None):
     """Aggregate data-parallel gradients with bidirectional compression.
 
     Must be called inside shard_map. Returns (grads_hat, new_ef_state) —
@@ -286,6 +287,10 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
     messages are actual uint8 buffers; under `allgather` the packed
     bytes themselves cross the collective. Bit-identical to the
     unpacked path — every codec round-trips exactly to its compressor.
+
+    `recorder` (duck-typed, obs.trace.TraceRecorder) threads through to
+    the plan/schedule/wire execution hooks for per-message span
+    attribution; None or disabled leaves the traced graph untouched.
     """
     axis_names = tuple(axis_names)
     if plan is None and schedule is not None:
@@ -326,10 +331,11 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
             if ef_state is None:
                 raise ValueError("error_feedback=True requires ef_state")
             agg, ef, _bufs = sched.execute_with_state(
-                post, grads, ef_state, key, wire=codec, wire_key=wk)
+                post, grads, ef_state, key, wire=codec, wire_key=wk,
+                recorder=recorder)
             return ret(agg, ef)
         agg, _bufs = sched.execute(post, grads, key, wire=codec,
-                                   wire_key=wk)
+                                   wire_key=wk, recorder=recorder)
         return ret(agg, ef_state)
 
     if cfg.error_feedback:
@@ -338,7 +344,8 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         fn = (_unit_simulated_ef(cfg, axis_names)
               if cfg.strategy == "simulated"
               else _unit_allgather_ef(cfg, axis_names))
-        agg, ef = ex.execute_with_state(fn, grads, ef_state, key)
+        agg, ef = ex.execute_with_state(fn, grads, ef_state, key,
+                                        recorder=recorder)
         return ret(agg, ef)
 
     if cfg.strategy == "simulated":
@@ -351,7 +358,7 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         fn = _unit_shared_random(cfg, axis_names)
     else:  # pragma: no cover
         raise ValueError(cfg.strategy)
-    return ret(ex.execute(fn, grads, key), ef_state)
+    return ret(ex.execute(fn, grads, key, recorder=recorder), ef_state)
 
 
 def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,

@@ -263,27 +263,45 @@ class UnitPlan:
         return jax.vmap(fn)(x, m, kb)
 
     def execute(self, fn: Callable[[Array, Array], Array], grads,
-                key: Array):
+                key: Array, *, recorder=None):
         """Map fn(x_flat f32[d], key) -> f32[d] over every unit, batched
         per size class. Returns a pytree shaped/dtyped like `grads`.
 
         Leaf-aligned runs (all of layerwise) read/write leaves directly;
-        only leaf-spanning plans stage through a flat buffer."""
+        only leaf-spanning plans stage through a flat buffer.
+
+        `recorder` (duck-typed, obs.trace.TraceRecorder) instruments
+        each dispatch with a named scope + end-of-stage mark; None or a
+        disabled recorder leaves the traced graph untouched."""
+        rec = (recorder if recorder is not None
+               and getattr(recorder, "enabled", False) else None)
         leaves = jax.tree_util.tree_leaves(grads)
         flat = self.flatten(grads) if self.needs_flat else None
         keys = self.unit_keys(key)
         out_leaves = [None] * len(leaves)
         out_flat = (jnp.zeros((self.exec_total,), jnp.float32)
                     if flat is not None else None)
-        for b in self.buckets:
+        if rec is not None and leaves:
+            rec.begin(leaves[0], label="grads_ready")
+        for bi, b in enumerate(self.buckets):
             x = self._gather_runs(leaves, flat, b)
-            y = self._dispatch(fn, b, x, keys)
+            if rec is not None:
+                with rec.scope(f"repro/dispatch/b{bi}"):
+                    y = self._dispatch(fn, b, x, keys)
+                rec.mark(y, "dispatch", cat="dispatch",
+                         bucket_ids=(bi,), dims=(b.dim,), n_units=b.n,
+                         label=f"dispatch b{bi}")
+            else:
+                y = self._dispatch(fn, b, x, keys)
             out_flat = self._scatter_runs(out_leaves, out_flat, b, y)
         return self._assemble(out_leaves, out_flat)
 
-    def execute_with_state(self, fn, grads, state, key: Array):
+    def execute_with_state(self, fn, grads, state, key: Array, *,
+                           recorder=None):
         """Like execute, but fn(x, m, key) -> (y, m_new) threads a
         same-shaped per-unit state (error-feedback memory)."""
+        rec = (recorder if recorder is not None
+               and getattr(recorder, "enabled", False) else None)
         leaves = jax.tree_util.tree_leaves(grads)
         sleaves = jax.tree_util.tree_leaves(state)
         need = self.needs_flat
@@ -296,10 +314,19 @@ class UnitPlan:
                     if need else None)
         mout_flat = (jnp.zeros((self.exec_total,), jnp.float32)
                      if need else None)
-        for b in self.buckets:
+        if rec is not None and leaves:
+            rec.begin(leaves[0], label="grads_ready")
+        for bi, b in enumerate(self.buckets):
             x = self._gather_runs(leaves, flat, b)
             m = self._gather_runs(sleaves, mflat, b)
-            y, mn = self._dispatch_with_state(fn, b, x, m, keys)
+            if rec is not None:
+                with rec.scope(f"repro/dispatch/b{bi}"):
+                    y, mn = self._dispatch_with_state(fn, b, x, m, keys)
+                rec.mark([y, mn], "dispatch", cat="dispatch",
+                         bucket_ids=(bi,), dims=(b.dim,), n_units=b.n,
+                         label=f"dispatch b{bi}")
+            else:
+                y, mn = self._dispatch_with_state(fn, b, x, m, keys)
             out_flat = self._scatter_runs(out_leaves, out_flat, b, y)
             mout_flat = self._scatter_runs(mout_leaves, mout_flat, b, mn)
         return (self._assemble(out_leaves, out_flat),

@@ -138,7 +138,7 @@ class CommSchedule:
 
     # ---- execution -------------------------------------------------------
     def execute(self, fn: Callable[[Array, Array], Array], grads,
-                key: Array, *, wire=None, wire_key=None):
+                key: Array, *, wire=None, wire_key=None, recorder=None):
         """UnitPlan.execute, streamed: identical per-bucket dispatches and
         PRNG keys, issued message by message in backward-ready order with
         an ordering barrier between consecutive messages. Bit-identical
@@ -155,11 +155,20 @@ class CommSchedule:
         worker-key fold), and the return value is (tree, buffers) —
         sum(8 * b.size) over `buffers` is the measured wire truth.
         Because every codec round-trips bit-exactly to its compressor's
-        `sim`, wire mode never changes numerics either."""
+        `sim`, wire mode never changes numerics either.
+
+        `recorder` (duck-typed, obs.trace.TraceRecorder) instruments the
+        stream with per-message spans (or per-stage spans in wire mode);
+        None or a disabled recorder leaves the traced graph untouched —
+        the zero-overhead contract tests/test_obs.py compares jaxprs
+        over."""
         if wire is not None:
             from repro.core.wire import execute_schedule_wire
             return execute_schedule_wire(self, wire, fn, grads, key,
-                                         wire_key=wire_key)
+                                         wire_key=wire_key,
+                                         recorder=recorder)
+        rec = (recorder if recorder is not None
+               and getattr(recorder, "enabled", False) else None)
         plan = self.plan
         leaves = jax.tree_util.tree_leaves(grads)
         flat = plan.flatten(grads) if plan.needs_flat else None
@@ -167,22 +176,36 @@ class CommSchedule:
         out_leaves = [None] * len(leaves)
         out_flat = (jnp.zeros((plan.exec_total,), jnp.float32)
                     if flat is not None else None)
+        if rec is not None and leaves:
+            rec.begin(leaves[0], label="grads_ready")
         token = None
-        for msg in self.messages:
+        for mi, msg in enumerate(self.messages):
             ys: List[Tuple[Bucket, Array]] = []
             xs = [plan._gather_runs(leaves, flat, plan.buckets[bi])
                   for bi in msg.bucket_ids]
             xs = _order_after(xs, token)
-            for bi, x in zip(msg.bucket_ids, xs):
-                b = plan.buckets[bi]
-                ys.append((b, plan._dispatch(fn, b, x, keys)))
+            if rec is not None:
+                with rec.scope(f"repro/msg{mi}"):
+                    for bi, x in zip(msg.bucket_ids, xs):
+                        b = plan.buckets[bi]
+                        ys.append((b, plan._dispatch(fn, b, x, keys)))
+                rec.mark([y for _, y in ys], "message", cat="message",
+                         message=mi, bucket_ids=msg.bucket_ids,
+                         dims=tuple(plan.buckets[bi].dim
+                                    for bi in msg.bucket_ids),
+                         n_units=sum(plan.buckets[bi].n
+                                     for bi in msg.bucket_ids))
+            else:
+                for bi, x in zip(msg.bucket_ids, xs):
+                    b = plan.buckets[bi]
+                    ys.append((b, plan._dispatch(fn, b, x, keys)))
             token = ys[-1][1]
             for b, y in ys:
                 out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)
         return plan._assemble(out_leaves, out_flat)
 
     def execute_with_state(self, fn, grads, state, key: Array, *,
-                           wire=None, wire_key=None):
+                           wire=None, wire_key=None, recorder=None):
         """UnitPlan.execute_with_state, streamed (error-feedback memory
         threads through untouched by ordering/fusion: every unit's state
         row is read and written exactly once, in whichever message its
@@ -196,7 +219,10 @@ class CommSchedule:
         if wire is not None:
             from repro.core.wire import execute_schedule_wire_with_state
             return execute_schedule_wire_with_state(
-                self, wire, fn, grads, state, key, wire_key=wire_key)
+                self, wire, fn, grads, state, key, wire_key=wire_key,
+                recorder=recorder)
+        rec = (recorder if recorder is not None
+               and getattr(recorder, "enabled", False) else None)
         plan = self.plan
         leaves = jax.tree_util.tree_leaves(grads)
         need = plan.needs_flat
@@ -210,8 +236,10 @@ class CommSchedule:
         mout_flat = (jnp.zeros((plan.exec_total,), jnp.float32)
                      if need else None)
         sleaves = jax.tree_util.tree_leaves(state)
+        if rec is not None and leaves:
+            rec.begin(leaves[0], label="grads_ready")
         token = None
-        for msg in self.messages:
+        for mi, msg in enumerate(self.messages):
             pairs = []
             for bi in msg.bucket_ids:
                 b = plan.buckets[bi]
@@ -219,11 +247,28 @@ class CommSchedule:
                 pairs.append(plan._gather_runs(sleaves, mflat, b))
             pairs = _order_after(pairs, token)
             ys = []
-            for j, bi in enumerate(msg.bucket_ids):
-                b = plan.buckets[bi]
-                x, m = pairs[2 * j], pairs[2 * j + 1]
-                y, mn = plan._dispatch_with_state(fn, b, x, m, keys)
-                ys.append((b, y, mn))
+            if rec is not None:
+                with rec.scope(f"repro/msg{mi}"):
+                    for j, bi in enumerate(msg.bucket_ids):
+                        b = plan.buckets[bi]
+                        x, m = pairs[2 * j], pairs[2 * j + 1]
+                        y, mn = plan._dispatch_with_state(fn, b, x, m,
+                                                          keys)
+                        ys.append((b, y, mn))
+                rec.mark([y for _, y, _ in ys]
+                         + [mn for _, _, mn in ys],
+                         "message", cat="message", message=mi,
+                         bucket_ids=msg.bucket_ids,
+                         dims=tuple(plan.buckets[bi].dim
+                                    for bi in msg.bucket_ids),
+                         n_units=sum(plan.buckets[bi].n
+                                     for bi in msg.bucket_ids))
+            else:
+                for j, bi in enumerate(msg.bucket_ids):
+                    b = plan.buckets[bi]
+                    x, m = pairs[2 * j], pairs[2 * j + 1]
+                    y, mn = plan._dispatch_with_state(fn, b, x, m, keys)
+                    ys.append((b, y, mn))
             token = ys[-1][1]
             for b, y, mn in ys:
                 out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)

@@ -58,6 +58,7 @@ payload, wires exactly).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Callable, Optional, Tuple
@@ -662,9 +663,18 @@ def _bucket_region(buf: Array, layout: MessageLayout, j: int,
     return buf[off:off + n * nb].reshape(n, nb)
 
 
+def _active_recorder(recorder):
+    """The duck-typed zero-overhead guard (see obs.trace.active): the
+    recorder when enabled, else None → the uninstrumented graph."""
+    if recorder is not None and getattr(recorder, "enabled", False):
+        return recorder
+    return None
+
+
 def execute_schedule_wire(schedule, codec: WireCodec,
                           fn: Optional[Callable], grads, key: Array,
-                          wire_key: Optional[Callable] = None):
+                          wire_key: Optional[Callable] = None,
+                          recorder=None):
     """Stream a CommSchedule through REAL wire buffers.
 
     Per message: encode every member bucket's units (per-unit plan keys,
@@ -677,8 +687,13 @@ def execute_schedule_wire(schedule, codec: WireCodec,
     wire bytes. Returns (tree, buffers) — `8 * buf.size` summed over
     `buffers` is the measured wire truth (headers included; per-payload
     split via message_layouts).
+
+    `recorder` (duck-typed, obs.trace.TraceRecorder) emits per-message
+    compress/pack/decode (+ collective when `fn` is given) stage spans;
+    None or a disabled recorder leaves the traced graph untouched.
     """
     from repro.core.schedule import _order_after
+    rec = _active_recorder(recorder)
     plan = schedule.plan
     leaves = jax.tree_util.tree_leaves(grads)
     flat = plan.flatten(grads) if plan.needs_flat else None
@@ -688,38 +703,75 @@ def execute_schedule_wire(schedule, codec: WireCodec,
                 if flat is not None else None)
     layouts = message_layouts(schedule, codec)
     buffers = []
+    if rec is not None and leaves:
+        rec.begin(leaves[0], label="grads_ready")
     token = None
-    for msg, layout in zip(schedule.messages, layouts):
+    for mi, (msg, layout) in enumerate(zip(schedule.messages, layouts)):
+        attrs = (dict(message=mi, bucket_ids=msg.bucket_ids,
+                      dims=tuple(plan.buckets[bi].dim
+                                 for bi in msg.bucket_ids),
+                      n_units=sum(plan.buckets[bi].n
+                                  for bi in msg.bucket_ids),
+                      codec=codec.name) if rec is not None else None)
+
+        def _scope(stage):
+            return (rec.scope(f"repro/msg{mi}/{stage}")
+                    if rec is not None else contextlib.nullcontext())
         xs = [plan._gather_runs(leaves, flat, plan.buckets[bi])
               for bi in msg.bucket_ids]
         xs = _order_after(xs, token)
-        mats = [_dispatch_encode(codec, plan.buckets[bi], x, keys, wire_key)
-                for bi, x in zip(msg.bucket_ids, xs)]
-        buf = _message_buffer(layout, mats)
+        with _scope("compress"):
+            mats = [_dispatch_encode(codec, plan.buckets[bi], x, keys,
+                                     wire_key)
+                    for bi, x in zip(msg.bucket_ids, xs)]
+        if rec is not None:
+            rec.mark(mats, "compress", **attrs)
+        with _scope("pack"):
+            buf = _message_buffer(layout, mats)
+        if rec is not None:
+            rec.mark(buf, "pack", **attrs)
         buffers.append(buf)
         token = buf
-        for j, bi in enumerate(msg.bucket_ids):
-            b = plan.buckets[bi]
-            pay = _bucket_region(buf, layout, j, b.n)
-            xhat = _dispatch_decode(codec, b, pay)
-            y = xhat if fn is None else _dispatch_post(fn, b, pay, xhat,
-                                                       keys)
-            out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)
+        pays, xhats = [], []
+        with _scope("decode"):
+            for j, bi in enumerate(msg.bucket_ids):
+                b = plan.buckets[bi]
+                pay = _bucket_region(buf, layout, j, b.n)
+                pays.append(pay)
+                xhats.append(_dispatch_decode(codec, b, pay))
+        if rec is not None:
+            rec.mark(xhats, "decode", **attrs)
+        if fn is None:
+            ys = xhats
+        else:
+            with _scope("collective"):
+                ys = [_dispatch_post(fn, plan.buckets[bi], pay, xhat,
+                                     keys)
+                      for bi, pay, xhat in zip(msg.bucket_ids, pays,
+                                               xhats)]
+            if rec is not None:
+                rec.mark(ys, "collective", **attrs)
+        for bi, y in zip(msg.bucket_ids, ys):
+            out_flat = plan._scatter_runs(out_leaves, out_flat,
+                                          plan.buckets[bi], y)
     return plan._assemble(out_leaves, out_flat), tuple(buffers)
 
 
 def execute_schedule_wire_with_state(schedule, codec: WireCodec,
                                      fn: Optional[Callable], grads, state,
                                      key: Array,
-                                     wire_key: Optional[Callable] = None):
+                                     wire_key: Optional[Callable] = None,
+                                     recorder=None):
     """Error-feedback twin of execute_schedule_wire: per unit,
     e = x + m is encoded, the residual m' = e - decode(payload) (exactly
     the unpacked EF discipline since the round-trip is bit-exact), and
     y = fn(payload, e_hat, key). Decode and residual thread through
     codec.decode_ef_batch — with a fused codec that is ONE unpack kernel
     launch per bucket plus the caller-regime residual subtract. Returns
-    (tree, m_tree, buffers)."""
+    (tree, m_tree, buffers). `recorder` instruments the stream exactly
+    as in execute_schedule_wire, plus an `ef_update` span per message."""
     from repro.core.schedule import _order_after
+    rec = _active_recorder(recorder)
     plan = schedule.plan
     leaves = jax.tree_util.tree_leaves(grads)
     sleaves = jax.tree_util.tree_leaves(state)
@@ -734,8 +786,20 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
                  else None)
     layouts = message_layouts(schedule, codec)
     buffers = []
+    if rec is not None and leaves:
+        rec.begin(leaves[0], label="grads_ready")
     token = None
-    for msg, layout in zip(schedule.messages, layouts):
+    for mi, (msg, layout) in enumerate(zip(schedule.messages, layouts)):
+        attrs = (dict(message=mi, bucket_ids=msg.bucket_ids,
+                      dims=tuple(plan.buckets[bi].dim
+                                 for bi in msg.bucket_ids),
+                      n_units=sum(plan.buckets[bi].n
+                                  for bi in msg.bucket_ids),
+                      codec=codec.name) if rec is not None else None)
+
+        def _scope(stage):
+            return (rec.scope(f"repro/msg{mi}/{stage}")
+                    if rec is not None else contextlib.nullcontext())
         pairs = []
         for bi in msg.bucket_ids:
             b = plan.buckets[bi]
@@ -744,17 +808,42 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
         pairs = _order_after(pairs, token)
         es = [pairs[2 * j] + pairs[2 * j + 1]
               for j in range(len(msg.bucket_ids))]
-        mats = [_dispatch_encode(codec, plan.buckets[bi], e, keys, wire_key)
-                for bi, e in zip(msg.bucket_ids, es)]
-        buf = _message_buffer(layout, mats)
+        with _scope("compress"):
+            mats = [_dispatch_encode(codec, plan.buckets[bi], e, keys,
+                                     wire_key)
+                    for bi, e in zip(msg.bucket_ids, es)]
+        if rec is not None:
+            rec.mark(mats, "compress", **attrs)
+        with _scope("pack"):
+            buf = _message_buffer(layout, mats)
+        if rec is not None:
+            rec.mark(buf, "pack", **attrs)
         buffers.append(buf)
         token = buf
-        for j, bi in enumerate(msg.bucket_ids):
+        pays, ehats, mns = [], [], []
+        with _scope("decode"):
+            for j, bi in enumerate(msg.bucket_ids):
+                b = plan.buckets[bi]
+                pay = _bucket_region(buf, layout, j, b.n)
+                ehat, mn = codec.decode_ef_batch(pay, es[j], b.dim)
+                pays.append(pay)
+                ehats.append(ehat)
+                mns.append(mn)
+        if rec is not None:
+            rec.mark(ehats, "decode", **attrs)
+            rec.mark(mns, "ef_update", **attrs)
+        if fn is None:
+            ys = ehats
+        else:
+            with _scope("collective"):
+                ys = [_dispatch_post(fn, plan.buckets[bi], pay, ehat,
+                                     keys)
+                      for bi, pay, ehat in zip(msg.bucket_ids, pays,
+                                               ehats)]
+            if rec is not None:
+                rec.mark(ys, "collective", **attrs)
+        for bi, y, mn in zip(msg.bucket_ids, ys, mns):
             b = plan.buckets[bi]
-            pay = _bucket_region(buf, layout, j, b.n)
-            ehat, mn = codec.decode_ef_batch(pay, es[j], b.dim)
-            y = ehat if fn is None else _dispatch_post(fn, b, pay, ehat,
-                                                       keys)
             out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)
             mout_flat = plan._scatter_runs(mout_leaves, mout_flat, b, mn)
     return (plan._assemble(out_leaves, out_flat),

@@ -230,7 +230,8 @@ class Engine:
 
     def _aggregate_grads(self, grads, key,
                          comp: Optional[CompressionConfig] = None,
-                         schedule=None, wire: bool = False):
+                         schedule=None, wire: bool = False,
+                         recorder=None):
         """Paper's Algorithm 1 over the DP axes, executed through the
         static UnitPlans (one batched compressor dispatch per unit size
         class — built once at jit-trace time, cached thereafter). With
@@ -259,7 +260,8 @@ class Engine:
         agg_rest, _ = compressed_allreduce(g_rest, s_rest, comp, dist.dp,
                                            key, self.dp_size,
                                            plan=rest_plan,
-                                           schedule=schedule, wire=wire)
+                                           schedule=schedule, wire=wire,
+                                           recorder=recorder)
         # fsdp leaves: Q_W already applied in the backward hook; grads are
         # scattered+averaged. Apply Q_M layer-wise (identical key on every
         # device -> consistent master compression).
@@ -269,14 +271,16 @@ class Engine:
             def master(x, ukey):
                 return comp.qm.sim(x, ukey)
             fsdp_plan = build_plan(g_fsdp, s_fsdp, comp.granularity)
-            g_fsdp = fsdp_plan.execute(master, g_fsdp, mkey)
+            g_fsdp = fsdp_plan.execute(master, g_fsdp, mkey,
+                                       recorder=recorder)
         return _merge(g_fsdp, agg_rest)
 
     def build_train_step(self, lr_schedule=None, *,
                          comp: Optional[CompressionConfig] = None,
                          telemetry: bool = False,
                          telemetry_entire_model: bool = True,
-                         schedule=None, wire: bool = False):
+                         schedule=None, wire: bool = False,
+                         tracer=None, metrics=None):
         """The sharded, jitted train step.
 
         `comp` overrides the engine's CompressionConfig for THIS step
@@ -306,6 +310,14 @@ class Engine:
         worker compressor and the simulated/allgather strategy) —
         bit-identical numerics, but every wire message is a materialized
         uint8 buffer whose size*8 is the wire truth.
+        `tracer` (duck-typed, obs.trace.TraceRecorder) instruments the
+        gradient-aggregation pipeline with per-message/stage spans (the
+        step's marks fire per executed step; block on the step's outputs
+        then call tracer.finalize_step). Note marks fire once per DEVICE
+        under shard_map — trace on a 1-device mesh for a clean timeline.
+        `metrics` (obs.metrics.MetricsRegistry) receives build counters
+        and static plan/schedule gauges. Both default to None — the
+        traced graph is then bit-identical to the uninstrumented one.
         """
         model, cfg, opt = self.model, self.cfg, self.opt
         dist = self.dist
@@ -356,7 +368,8 @@ class Engine:
                     lambda g: (g * jnp.asarray(inv, g.dtype)), grads)
                 loss = lsum * inv
             agg = self._aggregate_grads(grads, key, comp_eff,
-                                        schedule=schedule, wire=wire)
+                                        schedule=schedule, wire=wire,
+                                        recorder=tracer)
             if telemetry:
                 qw = (comp_eff or CompressionConfig(strategy="dense")).qw
                 inc = measure(mplan, qw, grads, key, grads_hat=agg,
@@ -390,6 +403,31 @@ class Engine:
                 step_fn, self.mesh,
                 in_specs=(pp, ops, bs, P()),
                 out_specs=(pp, ops, metrics_spec))
+        if metrics is not None and getattr(metrics, "enabled", False):
+            metrics.inc("engine/step_builds")
+            rest_plan, _ = self.comm_plans(comp_eff)
+            if rest_plan is not None:
+                metrics.gauge("engine/n_dispatches",
+                              rest_plan.num_dispatches)
+                metrics.gauge("engine/n_units", rest_plan.num_units)
+                sched_eff = schedule   # explicit schedule wins; else the
+                if sched_eff is None and comp_eff is not None and \
+                        comp_eff.fusion_bytes is not None:
+                    from repro.core.schedule import \
+                        build_schedule  # decision-carried fusion_bytes
+                    sched_eff = build_schedule(rest_plan,
+                                               comp_eff.fusion_bytes)
+                if sched_eff is not None:
+                    metrics.gauge("engine/n_messages",
+                                  sched_eff.num_messages)
+                    metrics.gauge("engine/fusion_bytes",
+                                  min(sched_eff.fusion_bytes, 2.0 ** 63))
+                if comp_eff is not None and comp_eff.strategy != "dense":
+                    from repro.control.telemetry import \
+                        payload_bits_per_step
+                    metrics.gauge(
+                        "engine/wire_bits_per_step",
+                        payload_bits_per_step(rest_plan, comp_eff.qw))
         return jax.jit(mapped, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------

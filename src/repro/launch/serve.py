@@ -56,7 +56,20 @@ def main(argv=None):
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--greedy", action="store_true", default=True)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="record host-side prefill/decode spans "
+                         "(obs.TraceRecorder) and write a Chrome "
+                         "trace-event JSON (open in Perfetto)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write serve counters (requests, tokens) and "
+                         "the per-token decode-latency histogram as "
+                         "JSON lines (obs.MetricsRegistry)")
     args = ap.parse_args(argv)
+    rec = reg = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry, TraceRecorder
+        rec = TraceRecorder() if args.trace_out else None
+        reg = MetricsRegistry() if args.metrics_out else None
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh(data=args.data, model=args.model)
@@ -80,10 +93,19 @@ def main(argv=None):
         batch["frames"] = frames_stub(key, args.batch, cfg.frontend_seq,
                                       cfg.d_model)
 
+    import contextlib
+
+    def span(name, **kw):
+        return (rec.host_span(name, **kw) if rec is not None
+                else contextlib.nullcontext())
+
     with mesh:
         t0 = time.time()
-        logits, cache = prefill(params, batch)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        with span("prefill", batch=args.batch, prompt=args.prompt):
+            logits, cache = prefill(params, batch)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            if rec is not None:  # honest span: close over finished work
+                jax.block_until_ready(tok)
         out = [tok]
         t_prefill = time.time() - t0
         # exercise the serving wire format on the first request, OUTSIDE
@@ -92,16 +114,36 @@ def main(argv=None):
         req = unpack_request(pack_request(tok, jnp.int32(args.prompt)))
         t0 = time.time()
         for t in range(args.gen - 1):
-            logits, cache = serve(params, req, cache)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            td = time.perf_counter()
+            with span("decode", pos=args.prompt + t):
+                logits, cache = serve(params, req, cache)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                if rec is not None:
+                    jax.block_until_ready(tok)
+            if reg is not None:
+                reg.observe("serve/decode_us",
+                            (time.perf_counter() - td) * 1e6)
+                reg.inc("serve/tokens", args.batch)
             out.append(tok)
             req = {"token": tok, "pos": jnp.int32(args.prompt + t + 1)}
         gen = jnp.stack(out, axis=1)
         t_decode = time.time() - t0
+    if rec is not None:
+        rec.finalize_step(0)
+    if reg is not None:
+        reg.inc("serve/requests")
+        reg.gauge("serve/prefill_us", t_prefill * 1e6)
+        reg.record(arch=cfg.name, batch=args.batch)
     print(f"arch={cfg.name} mesh={dict(eng.sizes)} batch={args.batch}")
     print(f"prefill({args.prompt} tok): {t_prefill*1e3:.0f} ms   "
           f"decode: {t_decode/max(1, args.gen-1)*1e3:.1f} ms/token")
     print("sample continuation:", gen[0].tolist())
+    if rec is not None:
+        rec.export(args.trace_out)
+        print(f"trace -> {args.trace_out} ({len(rec.events)} events)")
+    if reg is not None:
+        n_lines = reg.export_jsonl(args.metrics_out)
+        print(f"metrics -> {args.metrics_out} ({n_lines} lines)")
     return 0
 
 

@@ -27,7 +27,7 @@ from repro.ckpt import save_checkpoint
 from repro.optim import OptConfig, piecewise_linear
 
 
-def build_controller(args, eng, sched):
+def build_controller(args, eng, sched, *, metrics=None, tracer=None):
     kw = {}
     if args.policy == "variance_budget":
         kw["budget"] = args.variance_budget
@@ -39,7 +39,8 @@ def build_controller(args, eng, sched):
     collect = policy.needs_telemetry or bool(args.telemetry_out)
     return engine_controller(eng, policy, lr_schedule=sched,
                              replan_every=args.replan_every,
-                             collect_telemetry=collect)
+                             collect_telemetry=collect,
+                             metrics=metrics, tracer=tracer)
 
 
 def build_compression(args) -> CompressionConfig:
@@ -103,6 +104,14 @@ def main(argv=None):
                     help="write the controller's per-window telemetry "
                          "summaries + switch log as JSON (implies "
                          "--policy static when no policy is given)")
+    ap.add_argument("--trace-out", default="",
+                    help="record per-step/per-message spans with the "
+                         "obs.TraceRecorder and write a Chrome trace-event "
+                         "JSON (open in Perfetto). Forces per-step host "
+                         "sync — timings are honest, throughput is not")
+    ap.add_argument("--metrics-out", default="",
+                    help="write engine/controller/train counters and "
+                         "gauges as JSON lines (obs.MetricsRegistry)")
     ap.add_argument("--variance-budget", type=float, default=0.1,
                     help="variance_budget policy: max relative "
                          "compression error per bucket")
@@ -126,8 +135,15 @@ def main(argv=None):
     sched = piecewise_linear(args.lr, args.steps, max(1, args.steps // 10))
     if args.wire and args.policy:
         ap.error("--wire is the static engine path; drop --policy")
-    ctrl = build_controller(args, eng, sched) if args.policy else None
-    step_fn = None if ctrl else eng.build_train_step(sched, wire=args.wire)
+    rec = reg = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry, TraceRecorder
+        rec = TraceRecorder() if args.trace_out else None
+        reg = MetricsRegistry() if args.metrics_out else None
+    ctrl = (build_controller(args, eng, sched, metrics=reg, tracer=rec)
+            if args.policy else None)
+    step_fn = None if ctrl else eng.build_train_step(
+        sched, wire=args.wire, tracer=rec, metrics=reg)
     params, opt_state = eng.init_state(args.seed)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} params={n/1e6:.2f}M mesh={dict(eng.sizes)} "
@@ -191,6 +207,14 @@ def main(argv=None):
             else:
                 params, opt_state, m = step_fn(params, opt_state, batch,
                                                jnp.int32(i))
+            if rec is not None:
+                # span stamps arrive via host callbacks — close the step
+                # before cutting it (honest timings, serialized steps)
+                jax.block_until_ready(m["loss"])
+                rec.finalize_step(i)
+            if reg is not None:
+                reg.inc("train/steps")
+                reg.record(step=i)
             if i % max(1, args.steps // 20) == 0 or i == args.steps - 1:
                 print(f"step {i:5d} loss {float(m['loss']):.4f} "
                       f"lr {float(m['lr']):.4f} "
@@ -205,6 +229,18 @@ def main(argv=None):
         if args.telemetry_out:
             ctrl.export(args.telemetry_out)
             print(f"telemetry -> {args.telemetry_out}")
+    if rec is not None:
+        from repro.obs import format_step_summary
+        if rec.steps:
+            print(format_step_summary(rec.steps[-1]))
+        rec.export(args.trace_out)
+        print(f"trace -> {args.trace_out} "
+              f"({len(rec.events)} events, {len(rec.steps)} steps)")
+    if reg is not None:
+        if ctrl is not None:
+            ctrl.check_retraces()  # stamp the final retrace gauge
+        n_lines = reg.export_jsonl(args.metrics_out)
+        print(f"metrics -> {args.metrics_out} ({n_lines} lines)")
     return 0
 
 
