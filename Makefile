@@ -12,7 +12,7 @@ verify:
 # unmarked smoke subsets in the inner loop) — the inner-loop command.
 # Full `make verify` before shipping.
 verify-fast:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire and not obs"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire and not obs and not stream"
 
 # Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan
 # dispatches, adaptive controller). Writes BENCH_unitplan.json and
@@ -68,5 +68,18 @@ bench-obs: bench-guard
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
 	  "from benchmarks.microbench import obs_bench; obs_bench()"
 
+# Just the streaming-collective benchmark (ring vs serialized allgather
+# stream on an 8-virtual-device host ring: hop counts, bytes per hop,
+# measured exposed comm) -> BENCH_stream.json. The hop/byte COUNTS are
+# the gate — deterministic; the ring-vs-serialized wall clocks carry the
+# container-noise caveat the report embeds. XLA_FLAGS must be set before
+# jax initializes, hence on the recipe line. Clean-tree guarded like
+# every BENCH artifact.
+bench-stream: bench-guard
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. \
+	  XLA_FLAGS=--xla_force_host_platform_device_count=8 python -c \
+	  "from benchmarks.microbench import stream; stream()"
+
 .PHONY: verify verify-fast bench bench-guard bench-unitplan \
-	bench-controller bench-schedule bench-wire bench-kernels bench-obs
+	bench-controller bench-schedule bench-wire bench-kernels bench-obs \
+	bench-stream

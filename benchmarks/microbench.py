@@ -587,6 +587,75 @@ def obs_bench(out_path: str = None):
     return report
 
 
+def stream(out_path: str = None):
+    """BENCH_stream.json: the streaming ring collective vs the serialized
+    allgather stream, on a host ring of all local devices (run via `make
+    bench-stream`, which forces 8 virtual CPU devices — XLA_FLAGS must
+    be set before jax initializes). Per config x fusion threshold:
+    ring and rs hop/byte structure (hop-span count, bytes circulated per
+    hop) next to the serialized stream's measured total.
+
+    The serialized baseline is the allgather wire path under the SAME
+    8-device mesh (obs.calibrate.measure_collective) — the only honest
+    comparison; the single-device measure_schedule stream does 1/n of a
+    ring's decode work.
+
+    The GATES are the deterministic counts: hop spans per step ==
+    n_messages x (n_workers - 1) for both modes, and message counts
+    agreeing with the serialized path. The ring-vs-serialized wall
+    clocks (measured exposed hop time vs serialized stream total) are
+    recorded — and the ring must come in below the serialized total on
+    at least one config — but on a shared container they are noisy;
+    trust the counts and bytes, read the clocks as shape (the report
+    embeds the caveat)."""
+    from repro.obs.calibrate import measure_collective, measure_stream
+
+    n = jax.local_device_count()
+    comp = make_compressor("qsgd", levels=16)
+    report = {"caveat": "host-ring measurement on virtual CPU devices: "
+                        "hop/message COUNTS and bytes are deterministic "
+                        "gates; the ring-vs-serialized wall clocks are "
+                        "container-noise-limited shape, not truth.",
+              "n_workers": n, "configs": {}}
+    ring_below_serialized = []
+    for name, tree, sm in _grad_trees():
+        per_threshold = {}
+        for label, fb in (("fused_64kib", float(1 << 16)),
+                          ("one_shot", float("inf"))):
+            ser = measure_collective(tree, sm, comp, fb, reps=3)
+            entry = {"serialized_total_us": ser["total_us"],
+                     "serialized_stage_us": ser["stage_us"],
+                     "n_messages": ser["n_messages"]}
+            for mode in ("ring", "rs"):
+                m = measure_stream(tree, sm, comp, fb, mode=mode, reps=3,
+                                   warmup=1, chunk_bytes=float(1 << 16))
+                assert m["n_workers"] == n, m
+                assert m["n_messages"] == ser["n_messages"], (m, ser)
+                assert m["n_hop_spans_measured"] == \
+                    m["n_messages"] * (n - 1), m
+                entry[mode] = {k: m[k] for k in (
+                    "n_hops", "n_hop_spans_measured", "wire_bytes",
+                    "hop_bytes_total", "hop_us", "total_us", "stage_us")}
+            ring_below_serialized.append(
+                entry["ring"]["hop_us"] < ser["total_us"])
+            csv_line(f"stream_{name}_{label}", entry["ring"]["hop_us"],
+                     f"ring_hops={entry['ring']['n_hop_spans_measured']} "
+                     f"hop_bytes={entry['ring']['hop_bytes_total']} "
+                     f"serialized={ser['total_us']}us "
+                     f"rs_bytes={entry['rs']['hop_bytes_total']}")
+            per_threshold[label] = entry
+        report["configs"][name] = per_threshold
+    # the overlap acceptance: measured exposed ring comm strictly below
+    # the serialized stream total on at least one config
+    assert any(ring_below_serialized), report
+    report["ring_below_serialized_configs"] = sum(ring_below_serialized)
+
+    path = out_path or os.path.join(_REPO_ROOT, "BENCH_stream.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
 def run():
     operators()
     kernels()

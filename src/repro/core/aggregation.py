@@ -21,9 +21,21 @@ Strategies (see DESIGN.md §4) trade wire bytes vs generality:
   shared_random  Random-k with a shared seed: all workers pick the SAME
                  indices, so the collective carries only k values (psum).
                  Exact Random-k semantics; smallest possible wire cost.
+  ring           wire-only: the allgather wire path's packed buffers moved
+                 by a chunked-ppermute ring with per-hop decode-accumulate
+                 and double-buffered compress (core.wire.
+                 execute_schedule_stream). Bit-identical to `allgather`
+                 with wire=True — only the collective topology differs.
+  rs_stream      wire-only: compress→reduce-scatter→allgather — each
+                 worker encodes only the shard it owns and the packed
+                 SHARDS ride the ring (the FSDP on-demand pattern).
+                 Degenerates exactly to the allgather wire path at
+                 n_workers == 1; a different (Lemma-1-covered) algorithm
+                 beyond that.
 
 All functions here run INSIDE shard_map; `axis_names` are the data-parallel
-mesh axes (("data",) or ("pod", "data")).
+mesh axes (("data",) or ("pod", "data")). The streaming strategies require
+a single DP axis (the ring permutation is per-axis).
 """
 from __future__ import annotations
 
@@ -42,7 +54,10 @@ from repro.core.schedule import CommSchedule, build_schedule
 Array = jax.Array
 
 STRATEGIES = ("dense", "simulated", "allgather", "rs_compress_ag",
-              "shared_random")
+              "shared_random", "ring", "rs_stream")
+
+#: strategies executed by the streaming ring collective (wire=True only)
+STREAM_STRATEGIES = ("ring", "rs_stream")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,8 +84,10 @@ class CompressionConfig:
             raise ValueError(f"unknown strategy {self.strategy!r}")
         if self.strategy == "shared_random" and not isinstance(self.qw, RandomK):
             raise ValueError("shared_random requires a RandomK worker compressor")
-        if self.error_feedback and self.strategy not in ("simulated", "allgather"):
-            raise ValueError("error feedback supports simulated/allgather only")
+        if self.error_feedback and self.strategy not in (
+                "simulated", "allgather", "ring", "rs_stream"):
+            raise ValueError("error feedback supports simulated/allgather/"
+                             "ring/rs_stream only")
         if self.fusion_bytes is not None and not float(self.fusion_bytes) >= 0:
             raise ValueError(
                 f"fusion_bytes must be >= 0 or None, got {self.fusion_bytes!r}")
@@ -84,9 +101,14 @@ def _wire(x: Array, cfg: CompressionConfig) -> Array:
     return x.astype(jnp.bfloat16) if cfg.wire_dtype == "bfloat16" else x
 
 
-def _mean_psum(x: Array, axis_names) -> Array:
-    n = jax.lax.psum(jnp.ones((), x.dtype), axis_names)
-    return jax.lax.psum(x, axis_names) / n
+def _mean_psum(x: Array, axis_names, n_workers: int) -> Array:
+    """psum / n with the world size resolved STATICALLY. The legacy
+    version learned n from an extra psum(ones) — one redundant collective
+    per unit per step (tests/test_stream.py counts the drop via jaxpr
+    inspection). Dividing by the static n is bit-identical: psum(ones)
+    yields exactly float(n) for any world size representable in the
+    dtype, so the divisor value is unchanged."""
+    return jax.lax.psum(x, axis_names) / jnp.asarray(n_workers, x.dtype)
 
 
 def _worker_key(key: Array, axis_names) -> Array:
@@ -101,20 +123,23 @@ def _master_key(key: Array) -> Array:
 # per-unit aggregation closures
 # --------------------------------------------------------------------------
 
-def _unit_simulated(cfg: CompressionConfig, axis_names):
+def _unit_simulated(cfg: CompressionConfig, axis_names, n_workers: int):
     def fn(x: Array, key: Array) -> Array:
         xw = cfg.qw.sim(x, _worker_key(key, axis_names))
-        xm = _mean_psum(_wire(xw, cfg), axis_names).astype(x.dtype)
+        xm = _mean_psum(_wire(xw, cfg), axis_names,
+                        n_workers).astype(x.dtype)
         return cfg.qm.sim(xm, _master_key(key))
     return fn
 
 
-def _unit_simulated_ef(cfg: CompressionConfig, axis_names):
+def _unit_simulated_ef(cfg: CompressionConfig, axis_names,
+                       n_workers: int):
     def fn(x: Array, m: Array, key: Array):
         e = x + m
         xw = cfg.qw.sim(e, _worker_key(key, axis_names))
         m_new = e - xw
-        xm = _mean_psum(_wire(xw, cfg), axis_names).astype(x.dtype)
+        xm = _mean_psum(_wire(xw, cfg), axis_names,
+                        n_workers).astype(x.dtype)
         return cfg.qm.sim(xm, _master_key(key)), m_new
     return fn
 
@@ -163,17 +188,32 @@ def _unit_rs_compress_ag(cfg: CompressionConfig, axis_names, n_workers: int):
         # reduce-scatter: each worker owns the mean of its 1/n chunk
         shard = jax.lax.psum_scatter(xp, axis_names, scatter_dimension=0,
                                      tiled=True).astype(x.dtype) / n_workers
+        ds = shard.shape[0]
+        # Padding discipline (the phantom-tail bugfix): positions >= d are
+        # pad, not data. They arrive from psum_scatter as exact zeros, but
+        # the mask PINS that contract before encode — sparse codecs must
+        # never spend capacity-k records on a phantom tail — and the
+        # decoded tail is forced back to zero before the global trim, so
+        # a codec that emits a nonzero at a pad slot (e.g. a 0-value topk
+        # record dequantized oddly) cannot leak. bits.comm_report charges
+        # the TRUE per-worker shard sizes min(ds, d - w*ds), not the
+        # padded capacity (hand-computed regression in test_stream.py).
+        idx = jax.lax.axis_index(axis_names)
+        own_mask = (idx * ds + jnp.arange(ds)) < d
+        shard = jnp.where(own_mask, shard, 0.0)
         payload = _cast_payload(
             cfg.qw.encode(shard, _worker_key(key, axis_names)), cfg)
         gathered = jax.lax.all_gather(payload, axis_names, axis=0, tiled=False)
-        ds = shard.shape[0]
         decoded = jax.vmap(lambda p: cfg.qw.decode(p, ds, x.dtype))(gathered)
+        gmask = (jnp.arange(n_workers * ds) < d).reshape(n_workers, ds)
+        decoded = jnp.where(gmask, decoded, 0.0)
         xm = decoded.reshape(-1)[:d]
         return cfg.qm.sim(xm, _master_key(key))
     return fn
 
 
-def _unit_shared_random(cfg: CompressionConfig, axis_names):
+def _unit_shared_random(cfg: CompressionConfig, axis_names,
+                        n_workers: int):
     qw: RandomK = cfg.qw  # validated in __post_init__
 
     def fn(x: Array, key: Array) -> Array:
@@ -182,7 +222,8 @@ def _unit_shared_random(cfg: CompressionConfig, axis_names):
         vals = x[idx]
         if qw.scale:
             vals = vals * (d / max(1, min(d, int(round(qw.ratio * d)))))
-        vals = _mean_psum(_wire(vals, cfg), axis_names).astype(x.dtype)
+        vals = _mean_psum(_wire(vals, cfg), axis_names,
+                          n_workers).astype(x.dtype)
         xm = jnp.zeros((d,), x.dtype).at[idx].set(vals)
         return cfg.qm.sim(xm, _master_key(key))
     return fn
@@ -206,10 +247,10 @@ def _wire_codec_for(cfg: CompressionConfig, allgather_available=True):
     `allgather_available=False` is the single-device simulated-worker
     harness, which has no allgather wire path to point the caller at."""
     from repro.core.wire import wire_codec
-    if cfg.strategy not in ("simulated", "allgather"):
+    if cfg.strategy not in ("simulated", "allgather") + STREAM_STRATEGIES:
         raise ValueError(
-            f"wire=True supports the simulated/allgather strategies, not "
-            f"{cfg.strategy!r}")
+            f"wire=True supports the simulated/allgather/ring/rs_stream "
+            f"strategies, not {cfg.strategy!r}")
     codec = wire_codec(cfg.qw)
     if cfg.strategy == "simulated" and not codec.exact_sim:
         hint = ("run it under strategy='allgather', whose unpacked path "
@@ -219,13 +260,13 @@ def _wire_codec_for(cfg: CompressionConfig, allgather_available=True):
             f"{cfg.qw.name}: the static wire format is capacity-bounded "
             f"while sim is exact masking (the theory/practice gap the "
             f"paper is about) — {hint}")
-    if cfg.strategy == "allgather" and cfg.wire_dtype == "bfloat16":
+    if (cfg.strategy != "simulated" and cfg.wire_dtype == "bfloat16"):
         raise ValueError("wire=True packs f32 value legs; bfloat16 wire "
                          "casting is a different codec (unsupported)")
     return codec
 
 
-def _wire_post(cfg: CompressionConfig, axis_names, codec):
+def _wire_post(cfg: CompressionConfig, axis_names, codec, n_workers: int):
     """The post-decode leg of the wire pipeline: the collective + master
     compression that _unit_simulated/_unit_allgather run after Q_W —
     identical arithmetic, with Q_W replaced by the bit-exact payload
@@ -233,7 +274,8 @@ def _wire_post(cfg: CompressionConfig, axis_names, codec):
     (allgather)."""
     if cfg.strategy == "simulated":
         def post(payload, xhat, key):
-            xm = _mean_psum(_wire(xhat, cfg), axis_names).astype(xhat.dtype)
+            xm = _mean_psum(_wire(xhat, cfg), axis_names,
+                            n_workers).astype(xhat.dtype)
             return cfg.qm.sim(xm, _master_key(key))
     else:  # allgather: the REAL uint8 payload crosses the collective
         def post(payload, xhat, key):
@@ -267,7 +309,8 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                          telemetry_plan: Optional[UnitPlan] = None,
                          telemetry_entire_model: bool = True,
                          wire: bool = False,
-                         recorder=None):
+                         recorder=None,
+                         stream_chunk_bytes: Optional[float] = None):
     """Aggregate data-parallel gradients with bidirectional compression.
 
     Must be called inside shard_map. Returns (grads_hat, new_ef_state) —
@@ -291,10 +334,23 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
     `recorder` (duck-typed, obs.trace.TraceRecorder) threads through to
     the plan/schedule/wire execution hooks for per-message span
     attribution; None or disabled leaves the traced graph untouched.
+
+    Strategies `ring`/`rs_stream` require wire=True and a single DP
+    axis: they execute the schedule through the streaming chunked-
+    ppermute collective (CommSchedule.execute_streaming) instead of a
+    blocking all_gather — `ring` bit-identical to `allgather`,
+    `rs_stream` the compress→reduce-scatter→allgather shard pipeline.
+    `stream_chunk_bytes` sets their per-hop dispatch granularity
+    (None = whole-message hops).
     """
     axis_names = tuple(axis_names)
     if plan is None and schedule is not None:
         plan = schedule.plan
+    if cfg.strategy in STREAM_STRATEGIES and not wire:
+        raise ValueError(
+            f"strategy {cfg.strategy!r} is the streaming collective over "
+            f"PACKED wire buffers — pass wire=True (the unpacked payload "
+            f"pytrees have no single buffer to ring-permute)")
 
     def ret(agg, ef):
         if telemetry_plan is None:
@@ -310,7 +366,8 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                 "pack; use strategy='simulated' with an identity "
                 "compressor for a packed dense-f32 baseline")
         agg = jax.tree_util.tree_map(
-            lambda g: _mean_psum(_wire(g, cfg), axis_names).astype(g.dtype),
+            lambda g: _mean_psum(_wire(g, cfg), axis_names,
+                                 n_workers).astype(g.dtype),
             grads)
         return ret(agg, ef_state)
 
@@ -325,8 +382,27 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         codec = _wire_codec_for(cfg)
         sched = (ex if isinstance(ex, CommSchedule)
                  else build_schedule(plan, 0.0))
-        post = _wire_post(cfg, axis_names, codec)
         wk = partial(_worker_key, axis_names=axis_names)
+        if cfg.strategy in STREAM_STRATEGIES:
+            mode = "ring" if cfg.strategy == "ring" else "rs"
+
+            def stream_post(xm, ukey):
+                return cfg.qm.sim(xm, _master_key(ukey))
+            if cfg.error_feedback:
+                if ef_state is None:
+                    raise ValueError("error_feedback=True requires ef_state")
+                agg, ef, _bufs = sched.execute_streaming_with_state(
+                    stream_post, grads, ef_state, key, wire=codec,
+                    axis_names=axis_names, n_workers=n_workers, mode=mode,
+                    wire_key=wk, chunk_bytes=stream_chunk_bytes,
+                    recorder=recorder)
+                return ret(agg, ef)
+            agg, _bufs = sched.execute_streaming(
+                stream_post, grads, key, wire=codec, axis_names=axis_names,
+                n_workers=n_workers, mode=mode, wire_key=wk,
+                chunk_bytes=stream_chunk_bytes, recorder=recorder)
+            return ret(agg, ef_state)
+        post = _wire_post(cfg, axis_names, codec, n_workers)
         if cfg.error_feedback:
             if ef_state is None:
                 raise ValueError("error_feedback=True requires ef_state")
@@ -341,7 +417,7 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
     if cfg.error_feedback:
         if ef_state is None:
             raise ValueError("error_feedback=True requires ef_state")
-        fn = (_unit_simulated_ef(cfg, axis_names)
+        fn = (_unit_simulated_ef(cfg, axis_names, n_workers)
               if cfg.strategy == "simulated"
               else _unit_allgather_ef(cfg, axis_names))
         agg, ef = ex.execute_with_state(fn, grads, ef_state, key,
@@ -349,13 +425,13 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
         return ret(agg, ef)
 
     if cfg.strategy == "simulated":
-        fn = _unit_simulated(cfg, axis_names)
+        fn = _unit_simulated(cfg, axis_names, n_workers)
     elif cfg.strategy == "allgather":
         fn = _unit_allgather(cfg, axis_names)
     elif cfg.strategy == "rs_compress_ag":
         fn = _unit_rs_compress_ag(cfg, axis_names, n_workers)
     elif cfg.strategy == "shared_random":
-        fn = _unit_shared_random(cfg, axis_names)
+        fn = _unit_shared_random(cfg, axis_names, n_workers)
     else:  # pragma: no cover
         raise ValueError(cfg.strategy)
     return ret(ex.execute(fn, grads, key, recorder=recorder), ef_state)

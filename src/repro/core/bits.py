@@ -126,13 +126,27 @@ def comm_report(cfg: CompressionConfig,
         payload = sum(bits_of(d) for d in unit_dims)
         up = payload                       # contribute own payload
         down = (n_workers - 1) * payload   # receive everyone else's
-    elif cfg.strategy == "rs_compress_ag":
+    elif cfg.strategy in ("rs_compress_ag", "rs_stream"):
         # reduce-scatter dense wire (d elems traverse once) + all-gather of
-        # per-shard payloads
-        payload_shard = sum(bits_of(max(1, d // n_workers))
-                            for d in unit_dims)
-        up = w * d_total // 1 + payload_shard
-        down = (n_workers - 1) * payload_shard
+        # per-shard payloads. Bits are accounted on the TRUE d: the shard
+        # partition is ceil(d/n) per worker with a short tail, so the
+        # per-unit sizes min(ds, d - w*ds) sum exactly to d — the padded
+        # capacity tail is masked out of encode (aggregation/wire) and
+        # charged NOTHING here. (The legacy formula charged every worker
+        # floor(d/n), which neither matched the wire nor the data for
+        # non-divisible dims.) Per-worker figures are the exact worker
+        # average of the true totals: own shard = ceil(total/n) on the
+        # contribute leg, everyone else's = total - own on the receive
+        # leg.
+        payload_all = 0
+        for d in unit_dims:
+            ds = -(-d // n_workers)
+            payload_all += sum(bits_of(min(ds, d - wk * ds))
+                               for wk in range(n_workers)
+                               if d - wk * ds > 0)
+        own = -(-payload_all // n_workers)
+        up = w * d_total + own
+        down = payload_all - own
     elif cfg.strategy == "shared_random":
         kept = sum(max(1, int(round(cfg.qw.ratio * d))) for d in unit_dims)
         up = down = w * kept

@@ -277,6 +277,44 @@ class CommSchedule:
         return (plan._assemble(out_leaves, out_flat),
                 plan._assemble(mout_leaves, mout_flat))
 
+    def execute_streaming(self, post, grads, key: Array, *, wire,
+                          axis_names, n_workers: int, mode: str = "ring",
+                          wire_key=None, chunk_bytes=None, recorder=None):
+        """Execute the schedule through a REAL streaming collective: a
+        chunked-ppermute ring (mode='ring') or a compress→reduce-scatter→
+        allgather shard stream (mode='rs') under shard_map, double-
+        buffered so message i+1's fused compress+pack kernels are emitted
+        before message i's hops complete. Must run inside shard_map over
+        a single DP axis. `wire` is the WireCodec; `post(xm_row,
+        unit_key)` the master-compression closure applied to the
+        cross-worker mean (None returns the mean); `chunk_bytes` the
+        per-hop dispatch granularity (None = whole-message hops).
+        Returns (tree, buffers). mode='ring' is bit-identical to
+        `execute(..., wire=...)` under the allgather strategy — the
+        correctness contract tests/test_stream.py holds differentially.
+        See core.wire.execute_schedule_stream for the full mechanics."""
+        from repro.core.wire import execute_schedule_stream
+        return execute_schedule_stream(
+            self, wire, post, grads, None, key, axis_names=axis_names,
+            n_workers=n_workers, mode=mode, wire_key=wire_key,
+            chunk_bytes=chunk_bytes, recorder=recorder)
+
+    def execute_streaming_with_state(self, post, grads, state, key: Array,
+                                     *, wire, axis_names, n_workers: int,
+                                     mode: str = "ring", wire_key=None,
+                                     chunk_bytes=None, recorder=None):
+        """Error-feedback twin of execute_streaming: e = x + m is
+        encoded, m' = e - decode(own payload) — the same local EF
+        discipline as the serialized wire path (EF never depends on the
+        collective topology; under mode='rs' only the owned shard slice
+        of each residual row is live). Returns (tree, m_tree,
+        buffers)."""
+        from repro.core.wire import execute_schedule_stream
+        return execute_schedule_stream(
+            self, wire, post, grads, state, key, axis_names=axis_names,
+            n_workers=n_workers, mode=mode, wire_key=wire_key,
+            chunk_bytes=chunk_bytes, recorder=recorder)
+
 
 # ==========================================================================
 # schedule construction

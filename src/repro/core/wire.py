@@ -231,6 +231,34 @@ class WireCodec:
         xhat = self.decode_batch(payloads, d)
         return xhat, e2d - xhat
 
+    # ---- per-hop streaming (ring collectives) ----------------------------
+    # One ring hop delivers one source worker's packed payload rows; the
+    # receiver decodes them THE HOP THEY ARRIVE and deposits them into a
+    # gathered accumulator. The deposit is a SLOTTED WRITE at the source
+    # worker's index, never a running float sum: the executor's final
+    # jnp.mean then reduces the same (n_workers, ...) array in the same
+    # worker-index order as the allgather path's gathered-decode-mean,
+    # which is what makes the streaming ring bit-identical to the
+    # allgather wire path (a running sum in ring ARRIVAL order would
+    # associate the f32 adds differently on every worker).
+
+    def decode_accumulate(self, payloads: Array, acc: Array, slot,
+                          d: int) -> Array:
+        """One hop's decode-accumulate: decode (n_units, nbytes(d))
+        payload rows from the worker at (traced) index `slot` and write
+        them into `acc` (n_workers, n_units, d) at that slot."""
+        return acc.at[slot].set(self.decode_batch(payloads, d))
+
+    def decode_accumulate_ef(self, payloads: Array, e2d: Array, acc: Array,
+                             slot, d: int):
+        """Hop-0 (own payload) decode-accumulate under error feedback:
+        also returns the residual m = e - xhat via decode_ef_batch, so
+        the EF discipline stays the local encode-leg one — identical to
+        the allgather wire path's (EF never depends on the collective
+        topology)."""
+        xhat, m = self.decode_ef_batch(payloads, e2d, d)
+        return acc.at[slot].set(xhat), m
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseCodec(WireCodec):
@@ -848,3 +876,333 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
             mout_flat = plan._scatter_runs(mout_leaves, mout_flat, b, mn)
     return (plan._assemble(out_leaves, out_flat),
             plan._assemble(mout_leaves, mout_flat), tuple(buffers))
+
+
+# --------------------------------------------------------------------------
+# streaming collectives: chunked-ppermute ring under shard_map
+# --------------------------------------------------------------------------
+
+def _shard_dim(d: int, n_workers: int) -> int:
+    """Owned-shard length of a d-entry unit on n workers (ceil; the last
+    worker's shard is short when n does not divide d — the TRUE per-worker
+    sizes are min(ds, d - w*ds), which is what bits.comm_report charges)."""
+    return -(-d // n_workers)
+
+
+@functools.lru_cache(maxsize=256)
+def shard_message_layouts(schedule, codec: WireCodec,
+                          n_workers: int) -> Tuple[MessageLayout, ...]:
+    """message_layouts for the rs-stream path: each bucket's unit payload
+    is sized on the OWNED SHARD (ceil(d/n) entries), because under
+    compress→reduce-scatter→allgather each worker encodes only the shard
+    it owns — the FSDP on-demand pattern."""
+    plan = schedule.plan
+    outs = []
+    for msg in schedule.messages:
+        header = 4 * (1 + len(msg.bucket_ids))
+        off = header
+        offs, unb = [], []
+        for bi in msg.bucket_ids:
+            b = plan.buckets[bi]
+            nb = codec.nbytes(_shard_dim(b.dim, n_workers))
+            offs.append(off)
+            unb.append(nb)
+            off += b.n * nb
+        outs.append(MessageLayout(msg.bucket_ids, tuple(offs), tuple(unb),
+                                  header, off))
+    return tuple(outs)
+
+
+@functools.lru_cache(maxsize=1024)
+def layout_chunks(layout: MessageLayout,
+                  chunk_bytes: Optional[float]) -> Tuple[Tuple, ...]:
+    """Static chunk table of one message buffer: tuples of
+    (bucket_positions, byte_start, byte_stop). Chunks are what the ring
+    ppermutes — runs of whole bucket regions grouped under `chunk_bytes`
+    (ops.chunk_runs), so every chunk decodes with whole-bucket unpack
+    dispatches the hop it arrives. Chunk 0 absorbs the header bytes
+    (they ride along; receivers use the static layout, the header exists
+    for the buffer to be self-describing on a real wire)."""
+    sizes = [n_bytes_of for n_bytes_of in (
+        (layout.offsets[j + 1] if j + 1 < len(layout.offsets)
+         else layout.total_nbytes) - layout.offsets[j]
+        for j in range(len(layout.bucket_ids)))]
+    runs = ops.chunk_runs(sizes, chunk_bytes)
+    chunks = []
+    for run in runs:
+        start = (0 if run[0] == 0 else layout.offsets[run[0]])
+        stop = (layout.offsets[run[-1] + 1]
+                if run[-1] + 1 < len(layout.offsets)
+                else layout.total_nbytes)
+        chunks.append((run, start, stop))
+    return tuple(chunks)
+
+
+def execute_schedule_stream(schedule, codec: WireCodec,
+                            post: Optional[Callable], grads, state,
+                            key: Array, *, axis_names, n_workers: int,
+                            mode: str = "ring",
+                            wire_key: Optional[Callable] = None,
+                            chunk_bytes: Optional[float] = None,
+                            recorder=None):
+    """Stream a CommSchedule through a chunked-ppermute ring collective.
+
+    The real-overlap twin of execute_schedule_wire: per fused message the
+    packed uint8 buffer is moved hop-by-hop around the DP ring (n-1
+    `ppermute` steps of `chunk_bytes`-granular slices) instead of one
+    blocking all_gather, and each arriving chunk is decoded THAT HOP into
+    a slotted gathered accumulator (WireCodec.decode_accumulate — see its
+    docstring for why slotting, not summing, is what preserves
+    bit-identity with the allgather path). The loop is DOUBLE-BUFFERED:
+    message i+1's fused compress+pack kernels are emitted before message
+    i's hops, with
+
+      * a compute-stream barrier (message i's buffer → message i+1's
+        gathers), the same streaming contract as the serialized path, and
+      * a collective-stream barrier (message i-1's last hop → message
+        i's first hop) modelling one network channel,
+
+    so in program order compress(i+1) interleaves before collective(i)
+    completes — the overlap `simulate_schedule` models and the jaxpr
+    test in tests/test_stream.py proves.
+
+    mode="ring": every worker's full-unit payload circulates; the reduce
+    is mean-over-workers + `post` per unit — bit-identical to the
+    allgather wire path for every codec (same payloads, same
+    decode-then-mean in the same worker order).
+
+    mode="rs": compress→reduce-scatter→allgather — each bucket's dense
+    units are psum_scatter'd (padded to n·ceil(d/n), tiled over the unit
+    axis), each worker encodes ONLY the shard it owns (padding masked to
+    exact zeros before encode), and the packed SHARDS circulate; the
+    gathered shards concatenate (trimmed to the true d) into the mean.
+    At n_workers == 1 this degenerates exactly to the allgather wire
+    path; at n > 1 it is a genuinely different algorithm (the shard
+    partition is a finer "layer" partition, covered by the paper's
+    Lemma 1) whose wire cost is ~1/n of ring per direction. The dense
+    reduce-scatter is NOT pinned to the hop channel (real fabrics run it
+    on its own stream).
+
+    Error feedback (state is not None): e = x + m is encoded and the
+    residual m' = e - decode(own payload) — local to the encode leg,
+    identical to the serialized wire path's discipline (EF never sees
+    the topology). Under mode="rs" only the OWNED slice of each unit's
+    residual row is live (updated via dynamic_update_slice at
+    axis_index·ds); the other slices stay at their initial value, the
+    FSDP on-demand semantics.
+
+    `post(xm_row, unit_key) -> y_row` is the master-compression closure
+    applied to the mean (None returns the mean). Requires a single DP
+    axis (the ring permutation is defined on one axis). Returns
+    (tree, buffers) — or (tree, m_tree, buffers) with state.
+
+    `recorder` emits the serialized path's compress/pack/decode spans
+    plus one `hop` span per ring hop (name `hop{h} m{i}`, scope
+    `repro/msg{i}/hop{h}`) and a `collective` span for the reduce —
+    what obs.calibrate.measure_stream aggregates into measured exposed
+    comm. Under a multi-device shard_map every mark stamps once per
+    device; finalize_step(dedupe=True) collapses them.
+    """
+    from repro.core.schedule import _order_after
+    axis_names = tuple(axis_names)
+    if len(axis_names) != 1:
+        raise ValueError(
+            f"streaming collectives run over ONE data-parallel axis (the "
+            f"ring permutation is per-axis); got {axis_names!r}")
+    if mode not in ("ring", "rs"):
+        raise ValueError(f"mode must be 'ring' or 'rs', got {mode!r}")
+    axis = axis_names[0]
+    n = int(n_workers)
+    with_state = state is not None
+    rec = _active_recorder(recorder)
+    plan = schedule.plan
+    leaves = jax.tree_util.tree_leaves(grads)
+    sleaves = jax.tree_util.tree_leaves(state) if with_state else None
+    need = plan.needs_flat
+    flat = plan.flatten(grads) if need else None
+    mflat = plan.flatten(state) if need and with_state else None
+    keys = plan.unit_keys(key)
+    out_leaves = [None] * len(leaves)
+    mout_leaves = [None] * len(leaves)
+    out_flat = jnp.zeros((plan.exec_total,), jnp.float32) if need else None
+    mout_flat = (jnp.zeros((plan.exec_total,), jnp.float32)
+                 if need and with_state else None)
+    layouts = (message_layouts(schedule, codec) if mode == "ring"
+               else shard_message_layouts(schedule, codec, n))
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    my = jax.lax.axis_index(axis)
+    buffers = []
+    if rec is not None and leaves:
+        rec.begin(leaves[0], label="grads_ready")
+
+    def _attrs(mi, msg):
+        return (dict(message=mi, bucket_ids=msg.bucket_ids,
+                     dims=tuple(plan.buckets[bi].dim
+                                for bi in msg.bucket_ids),
+                     n_units=sum(plan.buckets[bi].n
+                                 for bi in msg.bucket_ids),
+                     codec=codec.name) if rec is not None else None)
+
+    def _scope(mi, stage):
+        return (rec.scope(f"repro/msg{mi}/{stage}")
+                if rec is not None else contextlib.nullcontext())
+
+    state_tok = dict(token=None, ctok=None)
+
+    def prepare(mi, msg, layout):
+        """The compute leg of one message: gather (barriered on the
+        previous message's BUFFER — the serialized path's streaming
+        contract), shard-reduce under mode='rs', encode, pack."""
+        attrs = _attrs(mi, msg)
+        if with_state:
+            pairs = []
+            for bi in msg.bucket_ids:
+                b = plan.buckets[bi]
+                pairs.append(plan._gather_runs(leaves, flat, b))
+                pairs.append(plan._gather_runs(sleaves, mflat, b))
+            pairs = _order_after(pairs, state_tok["token"])
+            xs = [pairs[2 * j] for j in range(len(msg.bucket_ids))]
+            ms = [pairs[2 * j + 1] for j in range(len(msg.bucket_ids))]
+        else:
+            xs = [plan._gather_runs(leaves, flat, plan.buckets[bi])
+                  for bi in msg.bucket_ids]
+            xs = _order_after(xs, state_tok["token"])
+            ms = None
+        dims, es, mps = [], [], []
+        if mode == "ring":
+            dims = [plan.buckets[bi].dim for bi in msg.bucket_ids]
+            es = ([x + m for x, m in zip(xs, ms)] if with_state else xs)
+            mps = [None] * len(xs)
+        else:  # rs: reduce-scatter the dense units, keep only our shard
+            for j, bi in enumerate(msg.bucket_ids):
+                b = plan.buckets[bi]
+                ds = _shard_dim(b.dim, n)
+                pad = n * ds - b.dim
+                xp = jnp.pad(xs[j], ((0, 0), (0, pad)))
+                shard = jax.lax.psum_scatter(
+                    xp, axis, scatter_dimension=1, tiled=True) / n
+                # padding enters psum_scatter as exact zeros; the mask
+                # pins the contract (nothing phantom reaches encode)
+                mask = (my * ds + jnp.arange(ds)) < b.dim
+                shard = jnp.where(mask[None, :], shard, 0.0)
+                if with_state:
+                    mp = jnp.pad(ms[j], ((0, 0), (0, pad)))
+                    m_shard = jax.lax.dynamic_slice(
+                        mp, (0, my * ds), (b.n, ds))
+                    es.append(shard + m_shard)
+                    mps.append(mp)
+                else:
+                    es.append(shard)
+                    mps.append(None)
+                dims.append(ds)
+        with _scope(mi, "compress"):
+            mats = [_dispatch_encode(codec, plan.buckets[bi], e, keys,
+                                     wire_key)
+                    for bi, e in zip(msg.bucket_ids, es)]
+        if rec is not None:
+            rec.mark(mats, "compress", **attrs)
+        with _scope(mi, "pack"):
+            buf = _message_buffer(layout, mats)
+        if rec is not None:
+            rec.mark(buf, "pack", **attrs)
+        buffers.append(buf)
+        state_tok["token"] = buf
+        return dict(mi=mi, msg=msg, layout=layout, buf=buf, es=es,
+                    mps=mps, dims=dims, attrs=attrs)
+
+    def finish(p):
+        """The collective leg: own decode (+EF residual), n-1 chunked
+        ppermute hops with decode-accumulate on arrival, mean + post."""
+        mi, msg, layout = p["mi"], p["msg"], p["layout"]
+        buf, dims, attrs = p["buf"], p["dims"], p["attrs"]
+        chunks = layout_chunks(layout, chunk_bytes)
+        accs, mns = [], []
+        with _scope(mi, "decode"):
+            for j, bi in enumerate(msg.bucket_ids):
+                b = plan.buckets[bi]
+                pay = _bucket_region(buf, layout, j, b.n)
+                acc0 = jnp.zeros((n, b.n, dims[j]), jnp.float32)
+                if with_state:
+                    acc, mn = codec.decode_accumulate_ef(
+                        pay, p["es"][j], acc0, my, dims[j])
+                    mns.append(mn)
+                else:
+                    acc = codec.decode_accumulate(pay, acc0, my, dims[j])
+                accs.append(acc)
+        if rec is not None:
+            rec.mark(accs, "decode", **attrs)
+            if with_state:
+                rec.mark(mns, "ef_update", **attrs)
+        cur = [buf[s:e] for (_, s, e) in chunks]
+        if n > 1:
+            cur = _order_after(cur, state_tok["ctok"])
+            for h in range(1, n):
+                with _scope(mi, f"hop{h}"):
+                    cur = [jax.lax.ppermute(c, axis, perm) for c in cur]
+                    src = jnp.mod(my - h, n)
+                    for (run, start, _), cbuf in zip(chunks, cur):
+                        for j in run:
+                            b = plan.buckets[msg.bucket_ids[j]]
+                            nb = layout.unit_nbytes[j]
+                            off = layout.offsets[j] - start
+                            pay = cbuf[off:off + b.n * nb].reshape(b.n, nb)
+                            accs[j] = codec.decode_accumulate(
+                                pay, accs[j], src, dims[j])
+                if rec is not None:
+                    rec.mark([cur[-1], accs[-1]], "hop",
+                             label=f"hop{h} m{mi}", **attrs)
+            state_tok["ctok"] = cur[-1]
+        ys, m_news = [], []
+        with _scope(mi, "collective"):
+            for j, bi in enumerate(msg.bucket_ids):
+                b = plan.buckets[bi]
+                kb = keys[jnp.asarray(b.unit_ids, jnp.int32)]
+                if mode == "ring":
+                    def unit_post(g, kk):
+                        xm = jnp.mean(g, axis=0)
+                        return xm if post is None else post(xm, kk)
+                    y = (unit_post(accs[j][:, 0, :], kb[0])[None]
+                         if b.n == 1
+                         else jax.vmap(unit_post, in_axes=(1, 0))(accs[j],
+                                                                  kb))
+                    if with_state:
+                        m_news.append(mns[j])
+                else:
+                    ds = dims[j]
+                    xm2d = accs[j].transpose(1, 0, 2).reshape(
+                        b.n, n * ds)[:, :b.dim]
+                    def unit_post(xm, kk):
+                        return xm if post is None else post(xm, kk)
+                    y = (unit_post(xm2d[0], kb[0])[None] if b.n == 1
+                         else jax.vmap(unit_post)(xm2d, kb))
+                    if with_state:
+                        m_new = jax.lax.dynamic_update_slice(
+                            p["mps"][j], mns[j], (0, my * ds))[:, :b.dim]
+                        m_news.append(m_new)
+                ys.append(y)
+        if rec is not None:
+            rec.mark(ys, "collective", **attrs)
+        nonlocal out_flat, mout_flat
+        for j, (bi, y) in enumerate(zip(msg.bucket_ids, ys)):
+            b = plan.buckets[bi]
+            out_flat = plan._scatter_runs(out_leaves, out_flat, b, y)
+            if with_state:
+                mout_flat = plan._scatter_runs(mout_leaves, mout_flat, b,
+                                               m_news[j])
+
+    # the depth-2 software pipeline: prepare(i+1) is emitted before
+    # finish(i), so compress(i+1) sits ahead of collective(i) in program
+    # order while the barriers above keep both streams internally ordered
+    pending = None
+    for mi, (msg, layout) in enumerate(zip(schedule.messages, layouts)):
+        p = prepare(mi, msg, layout)
+        if pending is not None:
+            finish(pending)
+        pending = p
+    if pending is not None:
+        finish(pending)
+    tree = plan._assemble(out_leaves, out_flat)
+    if with_state:
+        return (tree, plan._assemble(mout_leaves, mout_flat),
+                tuple(buffers))
+    return tree, tuple(buffers)

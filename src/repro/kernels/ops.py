@@ -536,6 +536,47 @@ def majority_words(words2d: Array, use_pallas: bool = False) -> Array:
 
 
 # --------------------------------------------------------------------------
+# chunk-granular dispatch (the streaming collective's unit of wire motion)
+# --------------------------------------------------------------------------
+
+def chunk_runs(sizes, chunk_bytes):
+    """Partition consecutive payload regions into dispatch chunks.
+
+    `sizes` are per-region byte counts (one fused message's per-bucket
+    payload regions, in buffer order); the return value is a tuple of
+    runs — tuples of region indices — covering 0..len(sizes)-1 in order.
+    A run accumulates consecutive regions until its bytes reach
+    `chunk_bytes`, then closes (the same greedy rule build_schedule uses
+    for message fusion, one level down). `chunk_bytes` None or inf means
+    one chunk for the whole message; 0 means one chunk per region. A
+    single region larger than the threshold still gets its own chunk —
+    regions are never split, so every chunk decodes with whole-bucket
+    pack/unpack dispatches (chunk boundaries align with bucket regions,
+    which is what lets the streaming executor decode each chunk the hop
+    it arrives).
+    """
+    sizes = [int(s) for s in sizes]
+    if not sizes:
+        return ()
+    if chunk_bytes is None or chunk_bytes != chunk_bytes or \
+            chunk_bytes == float("inf"):
+        return (tuple(range(len(sizes))),)
+    cb = float(chunk_bytes)
+    if cb < 0:
+        raise ValueError(f"chunk_bytes must be >= 0, got {chunk_bytes!r}")
+    runs, cur, cur_bytes = [], [], 0
+    for i, s in enumerate(sizes):
+        cur.append(i)
+        cur_bytes += s
+        if cur_bytes >= cb:
+            runs.append(tuple(cur))
+            cur, cur_bytes = [], 0
+    if cur:
+        runs.append(tuple(cur))
+    return tuple(runs)
+
+
+# --------------------------------------------------------------------------
 # bytes-moved accounting (from the kernel specs, NOT wall-clocks: on this
 # interpret-mode container microseconds measure Python, so BENCH artifacts
 # gate on deterministic traffic counts — the repo's standing convention).

@@ -280,6 +280,7 @@ class Engine:
                          telemetry: bool = False,
                          telemetry_entire_model: bool = True,
                          schedule=None, wire: bool = False,
+                         collective: Optional[str] = None,
                          tracer=None, metrics=None):
         """The sharded, jitted train step.
 
@@ -310,6 +311,14 @@ class Engine:
         worker compressor and the simulated/allgather strategy) —
         bit-identical numerics, but every wire message is a materialized
         uint8 buffer whose size*8 is the wire truth.
+        `collective` picks the wire collective's topology: None keeps the
+        config's strategy; 'allgather' forces the serialized
+        gather-all-payloads stream; 'ring' routes the same messages
+        through the streaming chunked-ppermute ring
+        (CommSchedule.execute_streaming — bit-identical to 'allgather',
+        with real compress/collective overlap in program order). Both
+        require `wire=True` and a compression config (the dense path has
+        no wire messages to stream).
         `tracer` (duck-typed, obs.trace.TraceRecorder) instruments the
         gradient-aggregation pipeline with per-message/stage spans (the
         step's marks fire per executed step; block on the step's outputs
@@ -322,6 +331,16 @@ class Engine:
         model, cfg, opt = self.model, self.cfg, self.opt
         dist = self.dist
         comp_eff = comp if comp is not None else self.comp
+        if collective is not None:
+            if collective not in ("allgather", "ring"):
+                raise ValueError(
+                    f"collective must be None, 'allgather' or 'ring'; "
+                    f"got {collective!r}")
+            if not wire or comp_eff is None or comp_eff.strategy == "dense":
+                raise ValueError(
+                    "collective= picks the wire collective's topology: it "
+                    "requires wire=True and a compression config")
+            comp_eff = dataclasses.replace(comp_eff, strategy=collective)
         if schedule is not None:
             from repro.launch.comm_sched import resolve_schedule
             rest_plan, _ = self.comm_plans(comp_eff)

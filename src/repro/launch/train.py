@@ -94,6 +94,14 @@ def main(argv=None):
                          "uint8 buffer, bit-identical numerics; prints "
                          "accounted vs measured wire bits (static path "
                          "only — not combined with --policy)")
+    ap.add_argument("--collective", default=None,
+                    choices=("allgather", "ring"),
+                    help="wire-collective topology (requires --wire): "
+                         "'allgather' = the serialized gather-everything "
+                         "stream, 'ring' = the streaming chunked-ppermute "
+                         "ring with per-hop decode-accumulate — "
+                         "bit-identical numerics, real compress/collective "
+                         "overlap in program order")
     ap.add_argument("--policy", default=None, choices=list(POLICIES),
                     help="adaptive compression policy; routes the run "
                          "through the control.Controller (default: the "
@@ -135,6 +143,12 @@ def main(argv=None):
     sched = piecewise_linear(args.lr, args.steps, max(1, args.steps // 10))
     if args.wire and args.policy:
         ap.error("--wire is the static engine path; drop --policy")
+    if args.collective and not args.wire:
+        ap.error("--collective picks the wire collective's topology; "
+                 "add --wire")
+    if args.collective and comp.strategy == "dense":
+        ap.error("--collective needs a compressor (the dense path has no "
+                 "wire messages to stream); add --compressor")
     rec = reg = None
     if args.trace_out or args.metrics_out:
         from repro.obs import MetricsRegistry, TraceRecorder
@@ -143,11 +157,13 @@ def main(argv=None):
     ctrl = (build_controller(args, eng, sched, metrics=reg, tracer=rec)
             if args.policy else None)
     step_fn = None if ctrl else eng.build_train_step(
-        sched, wire=args.wire, tracer=rec, metrics=reg)
+        sched, wire=args.wire, collective=args.collective, tracer=rec,
+        metrics=reg)
     params, opt_state = eng.init_state(args.seed)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} params={n/1e6:.2f}M mesh={dict(eng.sizes)} "
           f"comp={comp.strategy}/{comp.qw.name}/{comp.granularity.kind}"
+          + (f" collective={args.collective}" if args.collective else "")
           + (f" policy={args.policy}/replan={args.replan_every}"
              if ctrl else ""))
     # the static compression-execution plan the jitted step will run with

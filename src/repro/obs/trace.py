@@ -154,10 +154,25 @@ class TraceRecorder:
         })
 
     # ---- finalization ----------------------------------------------------
-    def finalize_step(self, step: Optional[int] = None) -> Dict:
+    def finalize_step(self, step: Optional[int] = None, *,
+                      dedupe: bool = False) -> Dict:
         """Convert the marks stamped since the last finalize into spans.
         Call after the step's outputs are blocked on (all callbacks for
-        the step have then fired). Returns the per-step summary."""
+        the step have then fired). Returns the per-step summary.
+
+        ``dedupe=True`` collapses repeated stamps of the SAME mark to the
+        latest one. Under a multi-device ``shard_map`` each debug
+        callback fires once per local device, so every mark stamps
+        n_devices times; keeping the last arrival per mark restores the
+        one-stamp-per-stage timeline (span end = the moment the slowest
+        device finished the stage). Required whenever the traced fn ran
+        on >1 local device; a no-op on single-device runs."""
+        if dedupe:
+            latest: Dict[int, int] = {}
+            for mid, t_ns in self._marks:
+                if mid not in latest or t_ns > latest[mid]:
+                    latest[mid] = t_ns
+            self._marks = list(latest.items())
         marks = sorted(self._marks, key=lambda m: m[1])
         self._marks = []
         step = len(self.steps) if step is None else int(step)
