@@ -12,7 +12,7 @@ verify:
 # unmarked smoke subsets in the inner loop) — the inner-loop command.
 # Full `make verify` before shipping.
 verify-fast:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire and not obs and not stream"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire and not obs and not stream and not scenario"
 
 # Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan
 # dispatches, adaptive controller). Writes BENCH_unitplan.json and
@@ -80,6 +80,16 @@ bench-stream: bench-guard
 	  XLA_FLAGS=--xla_force_host_platform_device_count=8 python -c \
 	  "from benchmarks.microbench import stream; stream()"
 
+# The fault-injected scenario campaign (SimCluster): registry configs x
+# scenarios x top-k ratios x granularities -> convergence + exposed-comm
+# telemetry + the per-cell layerwise-vs-entire-model verdict ->
+# BENCH_scenarios.json. Deterministic model numbers (no wall clocks).
+# SCENARIO_STEPS=n shrinks the per-cell step count for quick looks.
+# Clean-tree guarded like every BENCH artifact.
+bench-scenarios: bench-guard
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
+	  "from benchmarks.scenarios import scenarios; scenarios()"
+
 .PHONY: verify verify-fast bench bench-guard bench-unitplan \
 	bench-controller bench-schedule bench-wire bench-kernels bench-obs \
-	bench-stream
+	bench-stream bench-scenarios

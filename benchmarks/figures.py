@@ -133,5 +133,32 @@ def train_cnn_ef(model, comp, steps=100):
     return float(cnn_accuracy(cfg, params, test)), None
 
 
+def fig_scenarios(path=None):
+    """Paper-style rendering of the scenario campaign: one CSV row per
+    (config, scenario, ratio) cell of BENCH_scenarios.json — the
+    layerwise/entire-model final losses, per-step exposed comm of each
+    granularity, and the cell's verdict. Reads the committed artifact
+    (run `make bench-scenarios` first); the t_us column carries the
+    layerwise exposed comm so the rows sort like the other figures."""
+    import json
+    import os
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_scenarios.json")
+    with open(path) as f:
+        report = json.load(f)
+    for config, scenarios_ in sorted(report["configs"].items()):
+        for sname, cells in sorted(scenarios_.items()):
+            for rkey, cell in sorted(cells.items()):
+                lw, em = cell["layerwise"], cell["entire_model"]
+                csv_line(
+                    f"scenario_{config}_{sname}_{rkey}",
+                    lw["exposed_comm_us_per_step"],
+                    f"lw={lw['final_loss']:.4f}"
+                    f"|em={em['final_loss']:.4f}"
+                    f"|em_exposed_us={em['exposed_comm_us_per_step']:.1f}"
+                    f"|verdict={cell['verdict']}")
+
+
 ALL = [fig2_randomk, fig3_terngrad, fig4_qsgd, fig5_adaptive, fig6_threshold,
        fig7_topk, fig8_topk_large, ef_beyond_paper]

@@ -1,0 +1,274 @@
+"""BENCH_scenarios.json: the fault-injected scenario campaign.
+
+The paper's layerwise-vs-entire-model verdict, re-asked under hostile
+system conditions via the SimCluster harness (repro.sim): for each
+registry config x scenario x top-k ratio x granularity cell, train a
+few steps of simulated-multi-worker compressed SGD (Algorithm 1 with
+error feedback) while the scenario injects
+
+  * heterogeneous per-worker links (each worker's wire priced by the
+    alpha-beta model at ITS link, fused at the threshold
+    control.FusionPolicy picks for that link),
+  * straggler delays (deterministic (seed, step) draws, charged as
+    exposed time; the synchronous step waits for the slowest worker),
+  * elastic world-size events (EF residuals re-bucketed through a real
+    ckpt/ round-trip — the campaign keeps training through 4 -> 2 -> 4),
+  * Dirichlet non-IID shards (data/synthetic.py skewed samplers).
+
+Per-step convergence + exposed-comm telemetry flows through
+obs.MetricsRegistry (one registry per cell; the snapshot is embedded in
+the report). The verdict per (config, scenario, ratio) compares final
+losses with a 2% tie margin — the paper's conclusion, now conditional
+on the scenario.
+
+All losses are deterministic model-scale smoke numbers (CPU, few steps):
+trust the RELATIVE lw-vs-em ordering and the deterministic accounting,
+not absolute convergence. `SCENARIO_STEPS` overrides the per-cell step
+count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke
+from repro.configs.resnet9_cifar import RESNET9
+from repro.core import (CompressionConfig, Granularity, build_plan,
+                        make_compressor, stacked_mask)
+from repro.data import dirichlet_proportions, make_markov, \
+    noniid_classification_batch, noniid_markov_lm_batch
+from repro.models import DistConfig, Model
+from repro.models.cnn import cnn_loss, init_cnn
+from repro.obs import MetricsRegistry
+from repro.sim import LinkSpec, RescaleEvent, Scenario, SimCluster, \
+    StragglerSpec, init_ef
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+STEPS = int(os.environ.get("SCENARIO_STEPS", "16"))
+RATIOS = (0.01, 0.25)          # the ratio ladder's hostile + mild ends
+GLOBAL_BATCH = {"cnn": 32, "lm": 8}
+SEQ = 16
+LR = 0.02
+TIE_MARGIN = 0.02
+
+CONFIGS = ("resnet9", "mamba2-1.3b", "qwen3-moe-235b-a22b", "whisper-base")
+
+SCENARIOS = (
+    Scenario(name="clean", n_workers=4),
+    Scenario(
+        name="hetero_straggler", n_workers=4,
+        links=(LinkSpec(alpha_us=20.0, gbps=25.0),
+               LinkSpec(alpha_us=50.0, gbps=12.5),
+               LinkSpec(alpha_us=120.0, gbps=5.0),
+               LinkSpec(alpha_us=400.0, gbps=1.25)),
+        straggler=StragglerSpec(prob=0.25, delay_us=5000.0, seed=7)),
+    Scenario(
+        name="elastic_noniid", n_workers=4,
+        rescales=(RescaleEvent(step=max(1, STEPS // 3), world_size=2),
+                  RescaleEvent(step=max(2, 2 * STEPS // 3), world_size=4)),
+        dirichlet_alpha=0.3),
+)
+
+
+# --------------------------------------------------------------------------
+# per-config runners: init / per-worker loss / skewed worker batches
+# --------------------------------------------------------------------------
+
+class _CnnRunner:
+    categories = 10
+    global_batch = GLOBAL_BATCH["cnn"]
+
+    def init(self, key):
+        return init_cnn(RESNET9, key)
+
+    def loss(self, params, batch, key):
+        return cnn_loss(RESNET9, params, batch)
+
+    def worker_batch(self, key, props, per):
+        return noniid_classification_batch(key, props, per)
+
+
+class _LmRunner:
+    global_batch = GLOBAL_BATCH["lm"]
+
+    def __init__(self, arch):
+        self.cfg = get_smoke(arch)
+        self.model = Model(self.cfg, DistConfig())
+        self.categories = self.cfg.vocab
+        self.trans = make_markov(self.cfg.vocab, seed=0)
+
+    def init(self, key):
+        return self.model.init(key)
+
+    def loss(self, params, batch, key):
+        return self.model.loss(params, batch, key)
+
+    def worker_batch(self, key, props, per):
+        b = noniid_markov_lm_batch(key, self.trans, props, per, SEQ)
+        if self.cfg.arch_type == "audio":
+            n = props.shape[0]
+            b["frames"] = 0.02 * jax.random.normal(
+                jax.random.fold_in(key, 0xF),
+                (n, per, self.cfg.frontend_seq, self.cfg.d_model),
+                jnp.float32)
+        return b
+
+
+def _runner(config: str):
+    return _CnnRunner() if config == "resnet9" else _LmRunner(config)
+
+
+# --------------------------------------------------------------------------
+# the campaign cell: one (config, scenario, ratio, granularity) run
+# --------------------------------------------------------------------------
+
+def _step_fn(runner, cfg: CompressionConfig, sm, cluster: SimCluster,
+             cache: Dict, key_tuple: Tuple):
+    """Compiled train step, cached on (cfg, n) — scenarios at the same
+    world size share the compile (faults live outside the jit)."""
+    if key_tuple in cache:
+        return cache[key_tuple]
+
+    @jax.jit
+    def step(params, ef, wbatch, key):
+        def one(b, k):
+            return jax.value_and_grad(
+                lambda p: runner.loss(p, b, k))(params)
+        n = jax.tree_util.tree_leaves(wbatch)[0].shape[0]
+        wkeys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(n))
+        losses, wg = jax.vmap(one)(wbatch, wkeys)
+        g, ef = cluster.aggregate(wg, sm, jax.random.fold_in(key, 0xA),
+                                  ef_state=ef)
+        params = jax.tree_util.tree_map(lambda p, u: p - LR * u, params, g)
+        return params, ef, jnp.mean(losses)
+
+    cache[key_tuple] = step
+    return step
+
+
+def _run_cell(config: str, runner, scenario: Scenario, ratio: float,
+              gran: str, step_cache: Dict) -> Dict:
+    comp = CompressionConfig(qw=make_compressor("topk", ratio=ratio),
+                             granularity=Granularity(gran),
+                             error_feedback=True)
+    cluster = SimCluster(scenario, comp)
+    reg = MetricsRegistry()
+
+    # granularity deliberately NOT in the key: the lw and em cells of a
+    # verdict pair share init, shard proportions, and batch draws (the
+    # comparison is the granularity, nothing else). crc32, not hash():
+    # str hashes are salted per process and would unseed reruns.
+    key = jax.random.key(zlib.crc32(
+        f"{config}|{scenario.name}|{ratio}".encode()))
+    params = runner.init(key)
+    sm = stacked_mask(params)
+    plan = build_plan(params, sm, Granularity(gran))
+    n_max = max([scenario.n_workers]
+                + [ev.world_size for ev in scenario.rescales])
+    alpha = scenario.dirichlet_alpha
+    props_all = (dirichlet_proportions(jax.random.fold_in(key, 0xD),
+                                       n_max, runner.categories, alpha)
+                 if alpha is not None
+                 else jnp.full((n_max, runner.categories),
+                               1.0 / runner.categories))
+
+    n = scenario.n_workers
+    ef = init_ef(params, n)
+    losses = []
+    for i in range(STEPS):
+        n, ef, changed = cluster.maybe_rescale(i, ef)
+        if changed:
+            reg.inc("scenario/rescales")
+        per = max(1, runner.global_batch // n)
+        wbatch = runner.worker_batch(jax.random.fold_in(key, 100 + i),
+                                     props_all[:n], per)
+        step = _step_fn(runner, comp, sm, cluster, step_cache,
+                        (config, comp, n, per))
+        params, ef, loss = step(params, ef, wbatch,
+                                jax.random.fold_in(key, 10_000 + i))
+        acct = cluster.step_accounting(i, plan)
+        loss = float(loss)
+        losses.append(loss)
+        reg.observe("scenario/loss", loss)
+        reg.observe("scenario/exposed_comm_us", acct["exposed_comm_us"])
+        reg.observe("scenario/t_step_us", acct["t_step_us"])
+        reg.inc("scenario/steps")
+        reg.inc("scenario/straggler_hits", acct["straggler_hits"])
+        reg.gauge("scenario/world_size", n)
+        reg.record(step=i, config=config, scenario=scenario.name,
+                   ratio=ratio, granularity=gran)
+
+    final = sum(losses[-3:]) / len(losses[-3:])
+    return {
+        "final_loss": round(final, 6),
+        "first_loss": round(losses[0], 6),
+        "loss_curve": [round(v, 4) for v in losses],
+        "exposed_comm_total_us": round(cluster.exposed_comm_total_us(), 3),
+        "exposed_comm_us_per_step": round(
+            cluster.exposed_comm_total_us() / STEPS, 3),
+        "straggler_hits": int(reg.counters["scenario/straggler_hits"]),
+        "n_messages_worker0": cluster.accounting[0]["workers"][0][
+            "n_messages"],
+        "metrics": reg.snapshot(config=config, scenario=scenario.name,
+                                ratio=ratio, granularity=gran),
+    }
+
+
+def _verdict(lw: Dict, em: Dict) -> str:
+    """The paper's question per cell: which granularity converged lower,
+    with a tie margin (smoke-scale losses are close by construction)."""
+    a, b = lw["final_loss"], em["final_loss"]
+    if a < b * (1.0 - TIE_MARGIN):
+        return "layerwise"
+    if b < a * (1.0 - TIE_MARGIN):
+        return "entire_model"
+    return "tie"
+
+
+def scenarios(out_path: str = None):
+    """Run the campaign and write BENCH_scenarios.json.
+
+    Acceptance shape: >= 4 registry configs x >= 2 hostile scenarios x
+    both granularities, each cell carrying convergence (final/per-step
+    loss) + exposed-comm accounting + the layerwise-vs-entire-model
+    verdict."""
+    report = {"steps": STEPS, "ratios": list(RATIOS), "lr": LR,
+              "tie_margin": TIE_MARGIN,
+              "scenarios": {s.name: s.describe() for s in SCENARIOS},
+              "configs": {}}
+    for config in CONFIGS:
+        runner = _runner(config)
+        step_cache: Dict = {}
+        centry = {}
+        for sc in SCENARIOS:
+            sentry = {}
+            for ratio in RATIOS:
+                lw = _run_cell(config, runner, sc, ratio, "layerwise",
+                               step_cache)
+                em = _run_cell(config, runner, sc, ratio, "entire_model",
+                               step_cache)
+                cell = {"layerwise": lw, "entire_model": em,
+                        "verdict": _verdict(lw, em)}
+                sentry[f"ratio_{ratio}"] = cell
+                print(f"{config:24s} {sc.name:18s} r={ratio:<5} "
+                      f"lw={lw['final_loss']:.4f} "
+                      f"em={em['final_loss']:.4f} "
+                      f"verdict={cell['verdict']}", flush=True)
+            centry[sc.name] = sentry
+        report["configs"][config] = centry
+    path = out_path or os.path.join(_REPO_ROOT, "BENCH_scenarios.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    return report
+
+
+if __name__ == "__main__":
+    scenarios()

@@ -6,8 +6,9 @@ from repro.control.telemetry import (TelemetryState, accumulate,
                                      measurement_plan, payload_bits_per_step,
                                      summarize, to_json, unit_omegas)
 from repro.control.policy import (FUSION_LADDER, POLICIES, RATIO_LADDER,
-                                  BitBudgetPolicy, CompressionDecision,
-                                  FusionPolicy, GranularitySwitchPolicy,
-                                  PerDimRatio, Policy, StaticPolicy,
-                                  VarianceBudgetPolicy, make_policy)
+                                  AdaptiveKPolicy, BitBudgetPolicy,
+                                  CompressionDecision, FusionPolicy,
+                                  GranularitySwitchPolicy, PerDimRatio,
+                                  Policy, StaticPolicy, VarianceBudgetPolicy,
+                                  make_policy)
 from repro.control.controller import Controller, engine_controller

@@ -18,6 +18,9 @@ never retraces twice.
   BitBudgetPolicy          greedy per-bucket ratio allocation maximizing
                            captured gradient energy under a total
                            uplink-bits/step budget.
+  AdaptiveKPolicy          Shi et al.'s layer-wise adaptive-k: split a
+                           flat top-k element budget across buckets
+                           proportionally to measured gradient energy.
 """
 from __future__ import annotations
 
@@ -313,6 +316,49 @@ class BitBudgetPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveKPolicy:
+    """Shi et al.'s layer-wise adaptive-k sparsification (arXiv
+    1911.08727): keep the GLOBAL element budget of a flat `avg_ratio`
+    top-k (budget = avg_ratio · total elements) but split it across
+    buckets proportionally to each bucket's share of the measured
+    gradient energy — layers currently carrying more of the gradient
+    norm get a larger per-layer k, quiet layers get squeezed. Ratios
+    snap to the ladder, so the emitted decisions form a small closed
+    set and revisiting one hits the controller's compiled-step cache
+    (never retraces).
+
+    With no measured energy (all-zero window) every bucket falls back
+    to the flat `avg_ratio` — the policy degrades to uniform top-k
+    rather than emitting NaN shares."""
+
+    avg_ratio: float = 0.05
+    ladder: Tuple[float, ...] = RATIO_LADDER
+    name: str = "adaptive_k"
+    needs_telemetry: bool = True
+    needs_entire_model: bool = False
+
+    def decide(self, summary, current, mplan=None):
+        buckets = summary.get("buckets")
+        if (not buckets or not hasattr(current.qw, "ratio")
+                or current.strategy == "shared_random"):
+            return current
+        elems = {e["dim"]: e["n_units"] * e["dim"] for e in buckets}
+        budget = self.avg_ratio * sum(elems.values())
+        total_energy = sum(e["grad_norm_sq"] for e in buckets)
+        overrides = []
+        for entry in buckets:
+            dim = entry["dim"]
+            if total_energy <= 0.0:
+                want = self.avg_ratio
+            else:
+                share = entry["grad_norm_sq"] / total_energy
+                want = budget * share / elems[dim]
+            overrides.append((dim, _pick_ratio(self.ladder, want)))
+        return dataclasses.replace(current,
+                                   ratio_overrides=tuple(sorted(overrides)))
+
+
+@dataclasses.dataclass(frozen=True)
 class FusionPolicy:
     """Pick the comm-schedule fusion threshold from telemetry: for each
     candidate `fusion_bytes` in the ladder, price the window's measured
@@ -367,15 +413,16 @@ class FusionPolicy:
 
 
 POLICIES = ("static", "variance_budget", "granularity_switch", "bit_budget",
-            "fusion")
+            "adaptive_k", "fusion")
 
 
 def make_policy(name: str, **kw) -> Policy:
     """Build a policy by CLI name. kw are dataclass fields (budget=,
-    bits_per_step=, margin=, ladder=, alpha_us=)."""
+    bits_per_step=, margin=, ladder=, alpha_us=, avg_ratio=)."""
     table = {"static": StaticPolicy, "variance_budget": VarianceBudgetPolicy,
              "granularity_switch": GranularitySwitchPolicy,
-             "bit_budget": BitBudgetPolicy, "fusion": FusionPolicy}
+             "bit_budget": BitBudgetPolicy, "adaptive_k": AdaptiveKPolicy,
+             "fusion": FusionPolicy}
     if name not in table:
         raise ValueError(f"unknown policy {name!r}; have {sorted(table)}")
     return table[name](**kw)

@@ -22,4 +22,4 @@ from repro.core.bits import (comm_report, CommReport,
 from repro.core.wire import (WireCodec, DenseCodec, QSGDCodec, TernGradCodec,
                              SignSGDCodec, NaturalCodec, SparseCodec,
                              MessageLayout, has_wire_codec, message_layouts,
-                             wire_codec, word_padding)
+                             to_bf16, to_f32, wire_codec, word_padding)

@@ -251,18 +251,16 @@ def _wire_codec_for(cfg: CompressionConfig, allgather_available=True):
         raise ValueError(
             f"wire=True supports the simulated/allgather/ring/rs_stream "
             f"strategies, not {cfg.strategy!r}")
-    codec = wire_codec(cfg.qw)
+    codec = wire_codec(cfg.qw, wire_dtype=cfg.wire_dtype)
     if cfg.strategy == "simulated" and not codec.exact_sim:
-        hint = ("run it under strategy='allgather', whose unpacked path "
-                "already communicates the capacity payload"
+        hint = ("run it under strategy='allgather', whose collective "
+                "carries the real (capacity-bounded / bf16-cast) payload"
                 if allgather_available else "drop wire=True")
         raise ValueError(
-            f"{cfg.qw.name}: the static wire format is capacity-bounded "
-            f"while sim is exact masking (the theory/practice gap the "
-            f"paper is about) — {hint}")
-    if (cfg.strategy != "simulated" and cfg.wire_dtype == "bfloat16"):
-        raise ValueError("wire=True packs f32 value legs; bfloat16 wire "
-                         "casting is a different codec (unsupported)")
+            f"{cfg.qw.name}: this wire format is not bit-exact against "
+            f"sim (capacity-bounded records, or the lossy bfloat16 value "
+            f"cast) while strategy='simulated' promises the exact "
+            f"operator — {hint}")
     return codec
 
 

@@ -126,6 +126,62 @@ def _u8_rows_to_u32(b: Array) -> Array:
         b.reshape(b.shape[0], -1, 4), jnp.uint32)
 
 
+# --------------------------------------------------------------------------
+# value-record legs: f32, or the bf16 wire cast (wire_dtype="bfloat16")
+# --------------------------------------------------------------------------
+# The to_f32/to_bf16 idiom: the wire carries bf16 (2 bytes/record, a
+# deliberate lossy cast — round-trip is to-bf16-precision, NOT bit-exact),
+# compute stays f32. Only the dense and sparse codecs have f32 value
+# records to cast; the quantized-code codecs are already sub-16-bit.
+
+def to_f32(t):
+    """bf16 leaves -> f32 (everything else untouched)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x, t)
+
+
+def to_bf16(t):
+    """f32 leaves -> bf16 (everything else untouched)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, t)
+
+
+def _value_nbytes(k: int, wire_dtype: str) -> int:
+    """Bytes of one unit's k-value record leg: raw f32, or bf16 rounded
+    up to a whole uint32 word (the same padding rule as packed legs)."""
+    return 4 * k if wire_dtype == "float32" else 4 * words_for(16 * k)
+
+
+def _vals_to_u8(v: Array, wire_dtype: str) -> Array:
+    if wire_dtype == "float32":
+        return _f32_to_u8(v.reshape(-1).astype(jnp.float32))
+    b = jax.lax.bitcast_convert_type(
+        to_bf16(v.reshape(-1).astype(jnp.float32)), jnp.uint8).reshape(-1)
+    return jnp.pad(b, (0, (-b.size) % 4))
+
+
+def _u8_to_vals(b: Array, k: int, wire_dtype: str) -> Array:
+    if wire_dtype == "float32":
+        return _u8_to_f32(b)
+    return to_f32(jax.lax.bitcast_convert_type(
+        b[:2 * k].reshape(k, 2), jnp.bfloat16))
+
+
+def _val_rows_to_u8(v: Array, wire_dtype: str) -> Array:
+    if wire_dtype == "float32":
+        return _f32_rows_to_u8(v.astype(jnp.float32))
+    b = jax.lax.bitcast_convert_type(
+        to_bf16(v.astype(jnp.float32)), jnp.uint8).reshape(v.shape[0], -1)
+    return jnp.pad(b, ((0, 0), (0, (-b.shape[1]) % 4)))
+
+
+def _u8_rows_to_vals(b: Array, k: int, wire_dtype: str) -> Array:
+    if wire_dtype == "float32":
+        return _u8_rows_to_f32(b)
+    return to_f32(jax.lax.bitcast_convert_type(
+        b[:, :2 * k].reshape(b.shape[0], k, 2), jnp.bfloat16))
+
+
 def _pack_fields(vals: Array, width: int, use_pallas: bool) -> Array:
     """int32 field vector (k,) with values < 2**width -> packed uint8
     bytes (whole uint32 words; LSB-first within each field). Word-wise:
@@ -170,14 +226,40 @@ class WireCodec:
     vmapping the per-unit encode/decode, which remain the reference
     implementations either way.
 
+    `wire_dtype="bfloat16"` casts the f32 VALUE records through the
+    to_bf16/to_f32 idiom (2 bytes/record on the wire) — a deliberately
+    LOSSY format: exact_sim is False and the simulated-strategy wire
+    path refuses it (the real collectives carry it fine). Only the
+    dense and sparse codecs have value records to cast; the others
+    raise.
+
     `exact_sim`: decode(encode(x, key)) == comp.sim(x, key) bit for bit.
-    True for every codec except the capacity-bounded threshold records.
+    True for every codec except the capacity-bounded threshold records
+    and the bf16 value-cast variants.
     """
     comp: Compressor = Identity()
     use_pallas: bool = False
     fused: bool = True
+    wire_dtype: str = "float32"
 
-    exact_sim = True
+    #: codecs whose value-record legs support the bf16 wire cast
+    _SUPPORTS_BF16 = False
+
+    def __post_init__(self):
+        if self.wire_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}")
+        if self.wire_dtype == "bfloat16" and not self._SUPPORTS_BF16:
+            raise ValueError(
+                f"{type(self).__name__}({self.comp.name}): bfloat16 wire "
+                f"casting halves f32 VALUE records — only the dense and "
+                f"sparse codecs carry any (quantized-code legs are "
+                f"already sub-16-bit)")
+
+    @property
+    def exact_sim(self) -> bool:
+        """decode(encode(x)) == sim(x) bit for bit — never true for the
+        lossy bf16 value cast."""
+        return self.wire_dtype == "float32"
 
     @property
     def name(self) -> str:
@@ -191,9 +273,15 @@ class WireCodec:
         """8 * nbytes(d): exactly what a measured payload reports."""
         return 8 * self.nbytes(d)
 
+    def payload_bits(self, d: int) -> int:
+        """Accounted (pre-padding) bits at this codec's wire dtype: the
+        compressor's analytic formula at f32; the bf16-capable codecs
+        override to charge 16 bits per value record."""
+        return self.comp.payload_bits(d)
+
     def padding_bits(self, d: int) -> int:
         """Documented word-padding slack: wire_bits - accounted bits."""
-        return self.wire_bits(d) - self.comp.payload_bits(d)
+        return self.wire_bits(d) - self.payload_bits(d)
 
     # ---- wire ------------------------------------------------------------
     def encode(self, x: Array, key: Array) -> Array:
@@ -262,26 +350,34 @@ class WireCodec:
 
 @dataclasses.dataclass(frozen=True)
 class DenseCodec(WireCodec):
-    """Passthrough: raw f32 bytes (identity / dense reference)."""
+    """Passthrough: raw f32 bytes (identity / dense reference), or the
+    bf16 wire cast at wire_dtype="bfloat16" (16 bits/entry, lossy)."""
+
+    _SUPPORTS_BF16 = True
 
     def nbytes(self, d: int) -> int:
-        return 4 * d
+        return _value_nbytes(d, self.wire_dtype)
+
+    def payload_bits(self, d: int) -> int:
+        if self.wire_dtype == "float32":
+            return self.comp.payload_bits(d)
+        return 16 * d
 
     def encode(self, x: Array, key: Array) -> Array:
-        return _f32_to_u8(x.reshape(-1).astype(jnp.float32))
+        return _vals_to_u8(x, self.wire_dtype)
 
     def decode(self, payload: Array, d: int) -> Array:
-        return _u8_to_f32(payload)
+        return _u8_to_vals(payload, d, self.wire_dtype)
 
     def encode_batch(self, x2d: Array, keys: Array) -> Array:
         if not self.fused:
             return super().encode_batch(x2d, keys)
-        return _f32_rows_to_u8(x2d.astype(jnp.float32))
+        return _val_rows_to_u8(x2d, self.wire_dtype)
 
     def decode_batch(self, payloads: Array, d: int) -> Array:
         if not self.fused:
             return super().decode_batch(payloads, d)
-        return _u8_rows_to_f32(payloads)
+        return _u8_rows_to_vals(payloads, d, self.wire_dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -499,15 +595,17 @@ class NaturalCodec(WireCodec):
 class SparseCodec(WireCodec):
     """k records of (f32 value, ceil(log2(d))-bit index): topk / randomk
     (exact_sim) and the capacity-bounded threshold methods (not). Values
-    travel first (4k bytes), then the packed index leg. Resolves
-    PerDimRatio wrappers per dim, so adaptive per-bucket ratios wire with
-    the active k."""
+    travel first (4k bytes — or 2k word-padded at wire_dtype="bfloat16"),
+    then the packed index leg. Resolves PerDimRatio wrappers per dim, so
+    adaptive per-bucket ratios wire with the active k."""
     comp: Compressor = TopK()
     sim_exact: bool = True
 
+    _SUPPORTS_BF16 = True
+
     @property
     def exact_sim(self) -> bool:  # type: ignore[override]
-        return self.sim_exact
+        return self.sim_exact and self.wire_dtype == "float32"
 
     def _c(self, d: int) -> Compressor:
         return (self.comp.for_dim(d) if hasattr(self.comp, "for_dim")
@@ -518,22 +616,30 @@ class SparseCodec(WireCodec):
         r = c.ratio if hasattr(c, "ratio") else c.cap_ratio
         return _k_of(r, d)
 
+    def _vb(self, d: int) -> int:
+        """Byte size of the value leg at this wire dtype."""
+        return _value_nbytes(self._k(d), self.wire_dtype)
+
     def nbytes(self, d: int) -> int:
-        k = self._k(d)
-        return 4 * k + 4 * words_for(k * index_bits(d))
+        return self._vb(d) + 4 * words_for(self._k(d) * index_bits(d))
+
+    def payload_bits(self, d: int) -> int:
+        if self.wire_dtype == "float32":
+            return self._c(d).payload_bits(d)
+        return self._k(d) * (16 + index_bits(d))
 
     def encode(self, x: Array, key: Array) -> Array:
         d = x.shape[0]
         payload = self._c(d).encode(x, key)
         return jnp.concatenate([
-            _f32_to_u8(payload["val"].astype(jnp.float32)),
+            _vals_to_u8(payload["val"], self.wire_dtype),
             _pack_fields(payload["idx"].astype(jnp.int32), index_bits(d),
                          self.use_pallas)])
 
     def decode(self, payload: Array, d: int) -> Array:
         k = self._k(d)
-        val = _u8_to_f32(payload[:4 * k])
-        idx = _unpack_fields(payload[4 * k:], k, index_bits(d),
+        val = _u8_to_vals(payload[:self._vb(d)], k, self.wire_dtype)
+        idx = _unpack_fields(payload[self._vb(d):], k, index_bits(d),
                              self.use_pallas)
         return jnp.zeros((d,), jnp.float32).at[idx].set(val)
 
@@ -555,14 +661,16 @@ class SparseCodec(WireCodec):
         words = ops.fields_pack_units(idx, index_bits(d),
                                       use_pallas=self.use_pallas)
         return jnp.concatenate(
-            [_f32_rows_to_u8(val), _u32_rows_to_u8(words)], axis=1)
+            [_val_rows_to_u8(val, self.wire_dtype),
+             _u32_rows_to_u8(words)], axis=1)
 
     def decode_batch(self, payloads: Array, d: int) -> Array:
         if not self.fused:
             return super().decode_batch(payloads, d)
         k = self._k(d)
-        val = _u8_rows_to_f32(payloads[:, :4 * k])
-        idx = ops.fields_unpack_units(_u8_rows_to_u32(payloads[:, 4 * k:]),
+        vb = self._vb(d)
+        val = _u8_rows_to_vals(payloads[:, :vb], k, self.wire_dtype)
+        idx = ops.fields_unpack_units(_u8_rows_to_u32(payloads[:, vb:]),
                                       k, index_bits(d),
                                       use_pallas=self.use_pallas)
         scatter = lambda v, i: jnp.zeros((d,), jnp.float32).at[i].set(v)
@@ -576,12 +684,15 @@ class SparseCodec(WireCodec):
 # --------------------------------------------------------------------------
 
 def wire_codec(comp: Compressor, use_pallas: bool = False,
-               fused: bool = True) -> WireCodec:
+               fused: bool = True,
+               wire_dtype: str = "float32") -> WireCodec:
     """The WireCodec materializing `comp`'s payloads. Raises ValueError
     for compressors with no static wire realization. `fused=True`
     (default) routes the batch dispatches through the single-launch
-    compress+pack kernels; `fused=False` vmaps the per-unit reference."""
-    kw = dict(use_pallas=use_pallas, fused=fused)
+    compress+pack kernels; `fused=False` vmaps the per-unit reference.
+    `wire_dtype="bfloat16"` casts f32 value records to bf16 on the wire
+    (dense/sparse codecs only — the quantized codecs raise)."""
+    kw = dict(use_pallas=use_pallas, fused=fused, wire_dtype=wire_dtype)
     base = comp.base if hasattr(comp, "base") else comp  # PerDimRatio
     if isinstance(base, (TopK, RandomK)):
         return SparseCodec(comp=comp, **kw)

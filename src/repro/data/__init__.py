@@ -1,3 +1,5 @@
 from repro.data.synthetic import (lm_batches, markov_lm_batch, make_markov,
                                   classification_batch, frames_stub,
-                                  patches_stub)
+                                  patches_stub, dirichlet_proportions,
+                                  noniid_classification_batch,
+                                  noniid_markov_lm_batch)

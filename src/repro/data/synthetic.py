@@ -62,6 +62,15 @@ def lm_batches(vocab: int, batch: int, seq: int, seed: int = 0
         step += 1
 
 
+def _class_prototypes(classes: int, hw: int, channels: int) -> Array:
+    """The fixed smooth class prototypes both the IID and the skewed
+    classification samplers draw from (same constants => same task)."""
+    coarse = jax.random.normal(jax.random.key(1234),
+                               (classes, 4, 4, channels))
+    return jax.image.resize(coarse, (classes, hw, hw, channels),
+                            method="bilinear") * 2.0
+
+
 @partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def classification_batch(key: Array, batch: int, classes: int = 10,
                          hw: int = 32, channels: int = 3, noise: float = 0.5):
@@ -70,14 +79,83 @@ def classification_batch(key: Array, batch: int, classes: int = 10,
     upsampled so convolutional nets can detect them locally (white-noise
     prototypes are only separable by pixel-exact templates = MLPs)."""
     kp, kl, kn = jax.random.split(key, 3)
-    coarse = jax.random.normal(jax.random.key(1234),
-                               (classes, 4, 4, channels))
-    protos = jax.image.resize(coarse, (classes, hw, hw, channels),
-                              method="bilinear") * 2.0
+    protos = _class_prototypes(classes, hw, channels)
     labels = jax.random.randint(kl, (batch,), 0, classes)
     x = protos[labels] + noise * jax.random.normal(kn, (batch, hw, hw,
                                                         channels))
     return {"images": x.astype(jnp.float32), "labels": labels.astype(jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# non-IID worker shards (Dirichlet skew — the federated-learning standard)
+# --------------------------------------------------------------------------
+
+def dirichlet_proportions(key: Array, n_workers: int, categories: int,
+                          alpha: float) -> Array:
+    """(n_workers, categories) row-stochastic shard proportions: each
+    worker's category distribution is an independent Dirichlet(alpha)
+    draw. Small alpha => near-one-hot shards (hostile skew); large alpha
+    => near-uniform (approaches IID). Pure function of the key."""
+    conc = jnp.full((categories,), jnp.float32(alpha))
+    return jax.random.dirichlet(key, conc, shape=(n_workers,))
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
+def noniid_classification_batch(key: Array, proportions: Array,
+                                per_worker: int, classes: int = 10,
+                                hw: int = 32, channels: int = 3,
+                                noise: float = 0.5):
+    """Skewed per-worker classification batches: labels of worker w are
+    drawn from Categorical(proportions[w]) instead of uniform — same
+    prototypes, same noise model as classification_batch, different
+    shard composition. Returns {"images": (n, per, hw, hw, C),
+    "labels": (n, per)} with the leading worker axis the simulated-
+    worker aggregation path expects."""
+    n = proportions.shape[0]
+    protos = _class_prototypes(classes, hw, channels)
+
+    def worker(wkey, props):
+        kl, kn = jax.random.split(wkey)
+        labels = jax.random.categorical(kl, jnp.log(props + 1e-9),
+                                        shape=(per_worker,))
+        x = protos[labels] + noise * jax.random.normal(
+            kn, (per_worker, hw, hw, channels))
+        return x.astype(jnp.float32), labels.astype(jnp.int32)
+
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+    images, labels = jax.vmap(worker)(keys, proportions)
+    return {"images": images, "labels": labels}
+
+
+@partial(jax.jit, static_argnums=(3, 4))
+def noniid_markov_lm_batch(key: Array, trans: Array, proportions: Array,
+                           per_worker: int, seq: int):
+    """Skewed per-worker LM batches: worker w's sequences START from
+    Categorical(proportions[w]) over the vocab instead of uniform, then
+    evolve by the shared Markov chain — each worker sees a different
+    slice of the chain's state space (shard skew) while the learnable
+    transition structure stays the task. Returns {"tokens": (n, per,
+    S), "targets": (n, per, S)}."""
+    n = proportions.shape[0]
+
+    def worker(wkey, props):
+        k0, k1 = jax.random.split(wkey)
+        first = jax.random.categorical(k0, jnp.log(props + 1e-9),
+                                       shape=(per_worker,))
+
+        def step(tok, k):
+            nxt = jax.random.categorical(k, jnp.log(trans[tok] + 1e-9))
+            return nxt, nxt
+
+        keys = jax.random.split(k1, seq)
+        _, seqs = jax.lax.scan(step, first, keys)
+        seqs = jnp.concatenate([first[None], seqs], axis=0).T
+        return (seqs[:, :-1].astype(jnp.int32),
+                seqs[:, 1:].astype(jnp.int32))
+
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+    tokens, targets = jax.vmap(worker)(keys, proportions)
+    return {"tokens": tokens, "targets": targets}
 
 
 def frames_stub(key: Array, batch: int, frames: int, d_model: int) -> Array:

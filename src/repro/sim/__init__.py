@@ -1,0 +1,8 @@
+"""SimCluster: fault-injected scenario harness for the simulated
+cluster — hashable Scenario specs (heterogeneous links, stragglers,
+elastic world size, non-IID shards) wrapped around the Algorithm-1
+aggregation path without ever touching its numerics. See
+benchmarks/scenarios.py for the campaign runner."""
+from repro.sim.scenario import (DEFAULT_ALPHA_US, DEFAULT_GBPS, LinkSpec,
+                                RescaleEvent, Scenario, StragglerSpec)
+from repro.sim.cluster import SimCluster, init_ef

@@ -1,0 +1,211 @@
+"""SimCluster: the fault-injection harness around the simulated-worker
+Algorithm-1 path.
+
+Design rule (the correctness contract the differential suite pins):
+faults NEVER touch the traced aggregation numerics. `aggregate` is a
+pass-through to `core.aggregation.aggregate_simulated_workers` — same
+args, same graph, bit-identical always, not just at identity settings.
+The scenario acts on the three planes around it:
+
+  TIME   `step_accounting` prices one step's communication per worker
+         through the deterministic alpha-beta pipeline model
+         (core.schedule.simulate_schedule) at that worker's LINK
+         parameters, with the comm-schedule fusion threshold chosen per
+         link by control.FusionPolicy (a high-alpha link fuses, a fast
+         link streams per bucket), plus the scenario's straggler delay
+         draws — all charged into exposed-comm. The synchronous
+         allreduce waits for the slowest worker, so the step's exposed
+         comm is the max over workers.
+
+  SHAPE  `maybe_rescale` applies the scenario's elastic world-size
+         events between steps: EF residual state (leading worker axis)
+         is round-tripped THROUGH a real ckpt/ checkpoint (the flat-npz
+         save/load a deployment would actually restore from) and
+         re-bucketed onto the new world size without losing residual
+         mass — departing worker i folds its residual into surviving
+         slot i % new_n; joining workers start at zero. A rescale to
+         the current size returns the state bit-identically (and still
+         proves the checkpoint round-trip lossless on the way).
+
+  DATA   non-IID shard skew lives in data/synthetic.py (Dirichlet
+         proportions + skewed batch samplers); the campaign runner wires
+         it to `scenario.dirichlet_alpha`.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import load_checkpoint, save_checkpoint
+from repro.core.aggregation import (CompressionConfig,
+                                    aggregate_simulated_workers)
+from repro.core.plan import UnitPlan
+from repro.core.schedule import build_schedule, simulate_schedule
+from repro.sim.scenario import LinkSpec, Scenario
+
+
+def init_ef(params_like, n_workers: int):
+    """Zero EF residual state with the leading worker axis the
+    simulated-worker path threads: one residual per worker per leaf."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((n_workers,) + p.shape, p.dtype), params_like)
+
+
+def _rebucket_rows(x, new_n: int):
+    """Re-bucket one EF leaf (old_n, ...) onto `new_n` worker slots.
+
+    new_n == old_n: the identity (returned untouched — bit-identical).
+    Scale down: departing worker i folds into surviving slot i % new_n
+    (residual mass conserved: every old row lands in exactly one new
+    row). Scale up: surviving slots keep their rows, joiners start at
+    zero (mass conserved: zeros add nothing).
+    """
+    old_n = x.shape[0]
+    if new_n == old_n:
+        return x
+    if new_n > old_n:
+        pad = jnp.zeros((new_n - old_n,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, pad], axis=0)
+    extra = (-old_n) % new_n
+    if extra:
+        x = jnp.concatenate(
+            [x, jnp.zeros((extra,) + x.shape[1:], x.dtype)], axis=0)
+    return x.reshape((-1, new_n) + x.shape[1:]).sum(axis=0)
+
+
+class SimCluster:
+    """Scenario-driven wrapper over the simulated-worker aggregation.
+
+    `ckpt_dir` hosts the EF-rescale checkpoints (a fresh temp directory
+    when omitted). The accounting log accumulates one entry per priced
+    step; `accounting` exposes it for the campaign's telemetry export.
+    """
+
+    def __init__(self, scenario: Scenario, cfg: CompressionConfig, *,
+                 ckpt_dir: Optional[str] = None):
+        self.scenario = scenario
+        self.cfg = cfg
+        self._ckpt_dir = ckpt_dir
+        self.accounting: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    # numerics plane: the bit-identical pass-through
+    # ------------------------------------------------------------------
+    def aggregate(self, worker_grads, stacked, key, *, ef_state=None,
+                  plan=None, schedule=None, telemetry_plan=None,
+                  telemetry_entire_model=True, wire=False):
+        """EXACTLY aggregate_simulated_workers — the scenario never
+        reaches into a step's math (tests/test_scenarios.py holds this
+        bit for bit across the codec zoo, both granularities, EF and
+        wire). Fault injection happens around the step: time via
+        step_accounting, shape via maybe_rescale, data via the
+        synthetic samplers."""
+        return aggregate_simulated_workers(
+            worker_grads, stacked, self.cfg, key, ef_state=ef_state,
+            plan=plan, schedule=schedule, telemetry_plan=telemetry_plan,
+            telemetry_entire_model=telemetry_entire_model, wire=wire)
+
+    # ------------------------------------------------------------------
+    # shape plane: elastic world size through ckpt/
+    # ------------------------------------------------------------------
+    @property
+    def ckpt_dir(self) -> str:
+        if self._ckpt_dir is None:
+            self._ckpt_dir = tempfile.mkdtemp(prefix="simcluster_ef_")
+        return self._ckpt_dir
+
+    def rescale_ef(self, ef_state, new_n: int, *, step: int = 0):
+        """Re-bucket EF residuals onto `new_n` workers THROUGH a ckpt/
+        round-trip: save the (old_n, ...) state as a real checkpoint,
+        restore it, then re-bucket rows. The npz round-trip is lossless
+        (f32 exact; bf16 stored as uint16 views), so new_n == old_n
+        returns a bit-identical state — the identity contract."""
+        if ef_state is None:
+            return None
+        path = save_checkpoint(self.ckpt_dir, step, ef_state, tag="ef")
+        _, restored = load_checkpoint(path, like=ef_state)
+        return jax.tree_util.tree_map(
+            lambda x: _rebucket_rows(x, new_n), restored)
+
+    def maybe_rescale(self, step: int, ef_state):
+        """Apply the scenario's rescale events due exactly at `step`.
+        Returns (world_size, ef_state, changed)."""
+        n = self.scenario.world_size_at(step)
+        due = [ev for ev in self.scenario.rescales if ev.step == step]
+        if not due:
+            return n, ef_state, False
+        prev = (self.scenario.world_size_at(step - 1) if step > 0
+                else self.scenario.n_workers)
+        if n == prev:
+            return n, ef_state, False
+        return n, self.rescale_ef(ef_state, n, step=step), True
+
+    # ------------------------------------------------------------------
+    # time plane: per-link alpha-beta pricing + straggler draws
+    # ------------------------------------------------------------------
+    def link_fusion_bytes(self, plan: UnitPlan,
+                          link: LinkSpec) -> Optional[float]:
+        """The comm-schedule fusion threshold control.FusionPolicy picks
+        for THIS link's alpha/beta (None = the config's own threshold,
+        for non-layerwise plans where there is nothing to fuse)."""
+        from repro.control.policy import CompressionDecision, FusionPolicy
+        decision = CompressionDecision.from_config(self.cfg)
+        picked = FusionPolicy(alpha_us=link.alpha_us,
+                              gbps=link.gbps).decide({}, decision, plan)
+        return picked.fusion_bytes
+
+    def step_accounting(self, step: int, plan: UnitPlan, *,
+                        backward_us: Optional[float] = None,
+                        compress_gbps: float = 25.0) -> Dict:
+        """Price one step's communication under the scenario.
+
+        Every worker's wire is priced independently: its link's
+        alpha/beta through simulate_schedule on the schedule fused at
+        that link's FusionPolicy threshold, plus its straggler delay
+        draw (pure exposed time — the worker sits idle). The
+        synchronous allreduce completes when the slowest worker does,
+        so the step-level exposed comm is the per-worker max. Appends
+        and returns the accounting entry (all model numbers —
+        deterministic, hand-computable)."""
+        n = self.scenario.world_size_at(step)
+        delays = self.scenario.straggler.draws(step, n)
+        workers = []
+        for i in range(n):
+            link = self.scenario.link(i)
+            fb = self.link_fusion_bytes(plan, link)
+            sched = build_schedule(
+                plan, fb if fb is not None else 0.0)
+            sim = simulate_schedule(sched, qw=self.cfg.qw,
+                                    alpha_us=link.alpha_us,
+                                    gbps=link.gbps,
+                                    compress_gbps=compress_gbps,
+                                    backward_us=backward_us)
+            workers.append({
+                "worker": i,
+                "alpha_us": link.alpha_us,
+                "gbps": link.gbps,
+                "fusion_bytes": fb,
+                "n_messages": sim["n_messages"],
+                "t_total_us": sim["t_total_us"],
+                "model_exposed_us": sim["exposed_comm_us"],
+                "straggler_delay_us": float(delays[i]),
+                "exposed_us": sim["exposed_comm_us"] + float(delays[i]),
+            })
+        entry = {
+            "step": int(step),
+            "world_size": n,
+            "workers": workers,
+            "exposed_comm_us": max(w["exposed_us"] for w in workers),
+            "t_step_us": max(w["t_total_us"] + w["straggler_delay_us"]
+                             for w in workers),
+            "straggler_hits": int(sum(1 for d in delays if d > 0)),
+        }
+        self.accounting.append(entry)
+        return entry
+
+    def exposed_comm_total_us(self) -> float:
+        return sum(e["exposed_comm_us"] for e in self.accounting)

@@ -65,6 +65,36 @@ def test_smoke_prefill_then_decode(arch):
     assert not bool(jnp.isnan(lg2).any())
 
 
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "qwen3-moe-235b-a22b",
+                                  "whisper-base"])
+def test_smoke_wire_train_step(arch):
+    """The non-transformer-dense registry families (SSM, MoE, audio
+    encoder-decoder) each run one ENGINE train step over the wire path —
+    compressed gradients materialized as packed payloads, not just
+    sim()'d — so the scenario campaign's config zoo is exercised
+    end-to-end before the campaign prices it."""
+    from repro.core import CompressionConfig, Granularity, make_compressor
+    from repro.launch.engine import Engine
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_smoke(arch)
+    comp = CompressionConfig(qw=make_compressor("qsgd", levels=16),
+                             granularity=Granularity("layerwise"))
+    eng = Engine(cfg, make_host_mesh(1, 1), comp=comp)
+    batch = {"tokens": jnp.ones((4, S), jnp.int32) * 3,
+             "targets": jnp.ones((4, S), jnp.int32) * 5}
+    if cfg.arch_type == "audio":
+        batch["frames"] = frames_stub(KEY, 4, cfg.frontend_seq,
+                                      cfg.d_model).astype(
+                                          jnp.dtype(cfg.dtype))
+    step = eng.build_train_step(wire=True, collective="allgather")
+    params, opt_state = eng.init_state(0)
+    params, opt_state, m = step(params, opt_state, batch, jnp.int32(0))
+    assert jnp.isfinite(m["loss"])
+    for leaf in jax.tree_util.tree_leaves(params):
+        assert not bool(jnp.isnan(leaf).any())
+
+
 def test_decode_matches_prefill_continuation():
     """Teacher-forced decode after prefill reproduces the prefill logits
     of the next position (cache consistency, dense arch)."""

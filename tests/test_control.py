@@ -523,3 +523,80 @@ def test_engine_telemetry_step_threads_state(engine_setup):
     assert all(jnp.isfinite(jnp.asarray(b["omega_hat"]))
                for b in s["buckets"])
     json.dumps(ctrl.report())  # --telemetry-out payload is serializable
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveKPolicy (Shi et al. 1911.08727: layer-wise adaptive-k)
+# ---------------------------------------------------------------------------
+
+def _energy_split_tree(key=KEY):
+    """Two size-class buckets with a lopsided energy split: the (512,)
+    leaf carries ~1e4x the gradient norm of the (448,) leaf."""
+    hot = 10.0 * jax.random.normal(key, (512,))
+    cold = 0.01 * jax.random.normal(jax.random.fold_in(key, 1), (448,))
+    return {"hot": hot, "cold": cold}
+
+
+def test_adaptive_k_policy_allocates_ratio_by_energy():
+    from repro.control import AdaptiveKPolicy
+    qw = make_compressor("topk", ratio=0.05)
+    summary, mplan = _summary(qw, tree=_energy_split_tree())
+    base = CompressionDecision(qw=qw)
+    d = AdaptiveKPolicy(avg_ratio=0.05).decide(summary, base, mplan)
+    ratios = dict(d.ratio_overrides)
+    assert set(ratios) == {512, 448}
+    assert ratios[512] > ratios[448]  # energy buys ratio
+    # pure: same summary in, equal (hashable) decision out
+    d2 = AdaptiveKPolicy(avg_ratio=0.05).decide(summary, base, mplan)
+    assert d == d2 and hash(d) == hash(d2)
+    # guards: no telemetry / ratio-less operator / shared_random
+    assert AdaptiveKPolicy().decide({}, base, mplan) is base
+    sign = CompressionDecision(qw=make_compressor("signsgd"))
+    assert AdaptiveKPolicy().decide(summary, sign, mplan) is sign
+    shared = CompressionDecision(qw=make_compressor("randomk", ratio=0.1),
+                                 strategy="shared_random")
+    assert AdaptiveKPolicy().decide(summary, shared, mplan) is shared
+
+
+def test_adaptive_k_zero_energy_falls_back_to_flat_ratio():
+    from repro.control import AdaptiveKPolicy
+    qw = make_compressor("topk", ratio=0.05)
+    summary, mplan = _summary(qw, tree=_energy_split_tree())
+    dead = dict(summary)
+    dead["buckets"] = [dict(b, grad_norm_sq=0.0) for b in summary["buckets"]]
+    d = AdaptiveKPolicy(avg_ratio=0.05).decide(
+        dead, CompressionDecision(qw=qw), mplan)
+    assert all(r == 0.05 for _, r in d.ratio_overrides)
+
+
+def test_adaptive_k_decision_revisit_hits_cache():
+    """Revisiting an adaptive-k allocation (same summary => the SAME
+    frozen decision) must hit the controller's compiled-step cache — the
+    cache-no-retrace contract for the new policy."""
+    from repro.control import AdaptiveKPolicy
+    t = _energy_split_tree()
+    sm = stacked_mask(t)
+    mplan = measurement_plan(t, sm)
+    qw = make_compressor("topk", ratio=0.05)
+    summary, _ = _summary(qw, tree=t)
+    base = CompressionDecision(qw=qw)
+    policy = AdaptiveKPolicy(avg_ratio=0.05)
+    d1 = policy.decide(summary, base, mplan)
+    assert d1 != base
+    ctrl = Controller(StaticPolicy(), _sim_harness(t, sm, mplan, False),
+                      base, mplan, collect_telemetry=False)
+    f_base = ctrl.step_fn()
+    assert ctrl.builds == 1
+    ctrl.set_decision(d1)
+    f_d1 = ctrl.step_fn()
+    assert f_d1 is not f_base and ctrl.builds == 2
+    ctrl.set_decision(base)
+    assert ctrl.step_fn() is f_base and ctrl.builds == 2
+    ctrl.set_decision(policy.decide(summary, base, mplan))  # re-decided
+    assert ctrl.step_fn() is f_d1 and ctrl.builds == 2      # no retrace
+
+
+def test_adaptive_k_factory():
+    p = make_policy("adaptive_k", avg_ratio=0.1)
+    assert p.name == "adaptive_k" and p.avg_ratio == 0.1
+    assert p.needs_telemetry and not p.needs_entire_model

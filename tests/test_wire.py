@@ -434,10 +434,134 @@ def test_wire_refuses_unwireable_configs():
                             strategy="shared_random")
     with pytest.raises(ValueError, match="simulated/allgather"):
         compressed_allreduce(t, sm, cfg, ("data",), KEY, 1, wire=True)
-    bf = CompressionConfig(qw=make_compressor("topk", ratio=0.1),
-                           strategy="allgather", wire_dtype="bfloat16")
+    # bf16 value legs exist only on the dense/sparse codecs — a
+    # quantized-code codec has no f32 records to halve
     with pytest.raises(ValueError, match="bfloat16"):
-        compressed_allreduce(t, sm, bf, ("data",), KEY, 1, wire=True)
+        wire_codec(make_compressor("qsgd", levels=16),
+                   wire_dtype="bfloat16")
+    # and the lossy cast breaks strategy='simulated''s exact-operator
+    # promise (allgather carries it fine — see the bf16 suite below)
+    bf_sim = CompressionConfig(qw=make_compressor("topk", ratio=0.1),
+                               strategy="simulated",
+                               wire_dtype="bfloat16")
+    with pytest.raises(ValueError, match="bit-exact"):
+        compressed_allreduce(t, sm, bf_sim, ("data",), KEY, 1, wire=True)
     with pytest.raises(ValueError, match="dense"):  # not silently ignored
         compressed_allreduce(t, sm, CompressionConfig(strategy="dense"),
                              ("data",), KEY, 1, wire=True)
+
+
+# ==========================================================================
+# bfloat16 wire payloads (wire_dtype="bfloat16"): the value legs of the
+# dense and sparse codecs ship as bf16 — HALF the f32 value bits — via
+# the to_f32/to_bf16 cast idiom. The wire contract becomes decode(x) ==
+# sim(x).astype(bf16).astype(f32) BIT for bit (a well-defined lossy
+# reference), and the accounting contract stays exact: 8 * packed bytes
+# == wire_bits(d) with the bf16 leg padded to the uint32 word.
+# ==========================================================================
+
+BF16_CODECS = [
+    ("identity", {}),                       # dense f32 values -> bf16
+    ("topk", {"ratio": 0.25}),              # sparse values + f32 indices
+    ("randomk", {"ratio": 0.3, "scale": True}),
+]
+
+
+def _bf16_reference(comp, x, key):
+    return comp.sim(x, key).astype(jnp.bfloat16).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("d", [8, 33, 256])
+@pytest.mark.parametrize("name,kw", BF16_CODECS, ids=[n for n, _ in
+                                                      BF16_CODECS])
+def test_bf16_roundtrip_is_the_cast_reference(name, kw, d):
+    comp = make_compressor(name, **kw)
+    c16 = wire_codec(comp, wire_dtype="bfloat16")
+    x = jax.random.normal(jax.random.fold_in(KEY, d), (d,))
+    p = c16.encode(x, KEY)
+    y = c16.decode(p, d)
+    ref = _bf16_reference(comp, x, KEY)
+    assert y.dtype == jnp.float32
+    assert bool((y == ref).all()), (name, d,
+                                    float(jnp.max(jnp.abs(y - ref))))
+    # accounting == wire, exactly, at the halved width
+    assert 8 * p.size == c16.wire_bits(d)
+    # the lossy cast stays within bf16 precision of the f32 operator
+    exact = comp.sim(x, KEY)
+    tol = 2.0 ** -8 * jnp.abs(exact) + 1e-30
+    assert bool((jnp.abs(y - exact) <= tol).all())
+
+
+@pytest.mark.parametrize("name,kw", BF16_CODECS, ids=[n for n, _ in
+                                                      BF16_CODECS])
+def test_bf16_halves_value_payload_bits(name, kw):
+    d = 256
+    comp = make_compressor(name, **kw)
+    c32 = wire_codec(comp)
+    c16 = wire_codec(comp, wire_dtype="bfloat16")
+    assert c32.exact_sim and not c16.exact_sim
+    if name == "identity":
+        assert c16.payload_bits(d) == 16 * d == c32.payload_bits(d) // 2
+    else:
+        k = _k_of(kw["ratio"], d)
+        assert c32.payload_bits(d) == k * (32 + index_bits(d))
+        assert c16.payload_bits(d) == k * (16 + index_bits(d))
+    assert c16.wire_bits(d) < c32.wire_bits(d)
+
+
+@pytest.mark.wire
+@pytest.mark.parametrize("name,kw", BF16_CODECS, ids=[n for n, _ in
+                                                      BF16_CODECS])
+def test_bf16_batch_entry_points_match_per_unit(name, kw):
+    comp = make_compressor(name, **kw)
+    c16 = wire_codec(comp, wire_dtype="bfloat16")
+    d, n = 48, 5
+    xs = jax.random.normal(KEY, (n, d))
+    keys = jax.vmap(lambda i: jax.random.fold_in(KEY, i))(jnp.arange(n))
+    pb = c16.encode_batch(xs, keys)
+    yb = c16.decode_batch(pb, d)
+    for i in range(n):
+        p = c16.encode(xs[i], keys[i])
+        assert bool((pb[i] == p).all()), (name, i)
+        assert bool((yb[i] == c16.decode(p, d)).all()), (name, i)
+
+
+def test_bf16_collective_matches_f32_path_cast():
+    """End-to-end: the allgather collective with wire_dtype='bfloat16'
+    returns exactly the bf16-cast of the f32 wire path's output on a
+    1-worker mesh (mean over one worker is the identity, so the cast is
+    the ONLY difference)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.engine import shard_map
+    from repro.launch.mesh import make_host_mesh
+    t = _tree()
+    sm = stacked_mask(t)
+    mesh = make_host_mesh(1, 1)
+    qw = make_compressor("topk", ratio=0.25)
+
+    def run(cfg):
+        def f(g, key):
+            out, _ = compressed_allreduce(g, sm, cfg, ("data",), key, 1,
+                                          wire=True)
+            return out
+        return jax.jit(shard_map(f, mesh, in_specs=(P(), P()),
+                                 out_specs=P()))(t, KEY)
+
+    o32 = run(CompressionConfig(qw=qw, strategy="allgather"))
+    o16 = run(CompressionConfig(qw=qw, strategy="allgather",
+                                wire_dtype="bfloat16"))
+    for l32, l16 in zip(jax.tree_util.tree_leaves(o32),
+                        jax.tree_util.tree_leaves(o16)):
+        ref = l32.astype(jnp.bfloat16).astype(jnp.float32)
+        assert bool((ref == l16).all()), \
+            float(jnp.max(jnp.abs(ref - l16)))
+
+
+def test_bf16_cast_helpers_round_trip_exact_on_bf16_grid():
+    """to_f32(to_bf16(x)) is exact when x already sits on the bf16 grid
+    (the idiom's contract: casting down then up is a projection)."""
+    from repro.core import to_bf16, to_f32
+    t = _tree()
+    once = to_f32(to_bf16(t))
+    twice = to_f32(to_bf16(once))
+    _assert_trees_bitwise(once, twice, "bf16 projection idempotent")
