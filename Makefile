@@ -12,7 +12,7 @@ verify:
 # unmarked smoke subsets in the inner loop) — the inner-loop command.
 # Full `make verify` before shipping.
 verify-fast:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire and not obs and not stream and not scenario"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow and not sched and not wire and not obs and not stream and not scenario and not fault"
 
 # Full microbenchmarks (operators x granularity, Pallas kernels, UnitPlan
 # dispatches, adaptive controller). Writes BENCH_unitplan.json and
@@ -90,6 +90,21 @@ bench-scenarios: bench-guard
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. python -c \
 	  "from benchmarks.scenarios import scenarios; scenarios()"
 
+# The resilience-plane benchmark: the Fletcher-32 detection matrix (six
+# codecs x granularities x {serialized, ring} collectives: detection and
+# false-positive rates under single-bit flips), per-message integrity
+# overhead in bytes, the faulted-campaign recovery verdict (corrupted
+# cell + resend recovers the clean cell's layerwise-vs-entire_model
+# verdict), and the kill-and-resume bitwise gate -> BENCH_faults.json.
+# Deterministic (seeded corruption, no wall clocks); the gates are
+# ASSERTED, not just recorded. The ring leg needs virtual devices, so
+# XLA_FLAGS rides the recipe line. Clean-tree guarded like every BENCH
+# artifact. FAULT_STEPS=n shrinks the training legs for quick looks.
+bench-faults: bench-guard
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}:. \
+	  XLA_FLAGS=--xla_force_host_platform_device_count=8 python -c \
+	  "from benchmarks.faults import faults; faults()"
+
 .PHONY: verify verify-fast bench bench-guard bench-unitplan \
 	bench-controller bench-schedule bench-wire bench-kernels bench-obs \
-	bench-stream bench-scenarios
+	bench-stream bench-scenarios bench-faults

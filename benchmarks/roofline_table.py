@@ -153,8 +153,67 @@ def render_obs(bench_path: str = "BENCH_obs.json"):
     return rows
 
 
+FAULT_HEADERS = ("codec", "granularity", "path", "messages",
+                 "false_positive_rate", "detection_rate",
+                 "overhead_bytes", "resend_recovers")
+
+
+def render_faults(bench_path: str = "BENCH_faults.json"):
+    """CSV of the resilience-plane detection matrix (BENCH_faults.json):
+    per codec x granularity x collective path, the Fletcher-32
+    false-positive and single-bit-flip detection rates, the per-message
+    integrity overhead in bytes, and whether resend recovered the clean
+    aggregate bitwise (ring rows), followed by the recovery-verdict and
+    resume-gate summary lines. Silently skips when the artifact is
+    absent (run `make bench-faults` first)."""
+    if not os.path.exists(bench_path):
+        print(f"# {bench_path} not found — run `make bench-faults`")
+        return []
+    with open(bench_path) as fh:
+        d = json.load(fh)
+    rows = []
+    print(",".join(FAULT_HEADERS))
+    for path_name in ("serialized", "ring"):
+        cells = d["detection"].get(path_name, {})
+        for key in sorted(cells):
+            c = cells[key]
+            if not isinstance(c, dict) or "detection_rate" not in c:
+                continue
+            codec, gran = key.split("/", 1)
+            if path_name == "serialized":
+                msgs = c["n_messages"]
+                over = c["integrity_overhead_bytes"]
+                rec = ""
+            else:
+                msgs = c["bit_flip_hops"]
+                over = 4
+                rec = c["resend_recovers_clean_bitwise"]
+            rows.append((codec, gran, path_name, msgs,
+                         c["false_positive_rate"], c["detection_rate"],
+                         over, rec))
+            print(f"{codec},{gran},{path_name},{msgs},"
+                  f"{c['false_positive_rate']},{c['detection_rate']},"
+                  f"{over},{rec}")
+    rec = d.get("recovery", {})
+    if rec:
+        print(f"# recovery verdict: clean={rec['clean']['verdict']} "
+              f"faulted_resend={rec['faulted_resend']['verdict']} "
+              f"recovered={rec['verdict_recovered']} "
+              f"losses_bitwise_equal={rec['losses_bitwise_equal']}")
+    res = d.get("resume", {})
+    if res:
+        print(f"# resume: steps={res['steps']} kill_at={res['kill_at']} "
+              f"params_bitwise={res['params_bitwise']} "
+              f"ef_bitwise={res['ef_bitwise']} "
+              f"losses_replayed={res['losses_replayed']}")
+    for g, ok in sorted(d.get("gates", {}).items()):
+        print(f"# gate {g}: {'PASS' if ok else 'FAIL'}")
+    return rows
+
+
 if __name__ == "__main__":
     render()
     render_kernels()
     render_schedule()
     render_obs()
+    render_faults()

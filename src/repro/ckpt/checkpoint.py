@@ -4,12 +4,21 @@ Leaves are keyed by their tree path; metadata (step, structure) rides in a
 JSON sidecar entry. On multi-host deployments each host would save its
 addressable shards (path pattern includes a shard tag); in this container
 there is one host, so shard 0 holds everything.
+
+Resilience contract: writes are ATOMIC (tmp file + os.replace, so a kill
+mid-save never leaves a half-written file at the final path) and carry a
+CRC32 content digest over every stored array + the key list; `load`
+verifies the digest and wraps any truncation/garbage into a clear
+ValueError instead of handing back corrupt leaves. Round-trips are
+bit-exact (f32 raw; bf16 stored as uint16 views), which is what the
+bitwise resume-replay contract (resil.train_resilient) stands on.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -26,8 +35,27 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
     return flat
 
 
+def _digest(arrays: Dict[str, np.ndarray], keys) -> int:
+    """CRC32 over every stored array's (name, dtype, shape, bytes) plus
+    the key list — computed on the AS-STORED views (bf16 already viewed
+    as uint16), so save and load hash identical bytes."""
+    crc = zlib.crc32(json.dumps(list(keys)).encode())
+    for name in sorted(arrays):
+        a = np.ascontiguousarray(arrays[name])
+        crc = zlib.crc32(
+            f"{name}|{a.dtype.str}|{a.shape}".encode(), crc)
+        crc = zlib.crc32(a.tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
 def save_checkpoint(directory: str, step: int, tree, *, tag: str = "ckpt",
                     shard: int = 0) -> str:
+    """Atomically write one checkpoint; returns its final path. The
+    payload is staged to `<path>.tmp.npz` and os.replace-d into place
+    (same directory, hence same filesystem — the rename is atomic), so
+    readers only ever see whole files and `latest_checkpoint` never
+    picks up a partial write (the tmp suffix doesn't match its
+    pattern)."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(tree)
     arrays = {}
@@ -40,15 +68,20 @@ def save_checkpoint(directory: str, step: int, tree, *, tag: str = "ckpt",
             arr = arr.view(np.uint16)
         arrays[name] = arr
         meta["keys"].append(k)
+    meta["digest"] = _digest(arrays, meta["keys"])
     path = os.path.join(directory, f"{tag}_{step:08d}_s{shard}.npz")
-    np.savez(path, __meta__=json.dumps(meta), **arrays)
+    # np.savez appends ".npz" when missing — keep it on the tmp name so
+    # the staged file is exactly what os.replace moves
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, __meta__=json.dumps(meta), **arrays)
+    os.replace(tmp, path)
     return path
 
 
 def latest_checkpoint(directory: str, tag: str = "ckpt") -> Optional[str]:
     if not os.path.isdir(directory):
         return None
-    pat = re.compile(rf"{tag}_(\d+)_s0\.npz")
+    pat = re.compile(rf"{tag}_(\d+)_s0\.npz$")
     best, best_step = None, -1
     for f in os.listdir(directory):
         m = pat.match(f)
@@ -59,15 +92,36 @@ def latest_checkpoint(directory: str, tag: str = "ckpt") -> Optional[str]:
 
 def load_checkpoint(path: str, like) -> Tuple[int, Any]:
     """Restore into the structure of `like` (a pytree of arrays or
-    ShapeDtypeStructs). Returns (step, tree)."""
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["__meta__"]))
-        flat = {}
-        for i, k in enumerate(meta["keys"]):
-            arr = z[f"a{i}"]
-            if meta["dtypes"].get(f"a{i}") == "bfloat16":
-                arr = arr.view(jnp.bfloat16)
-            flat[k] = jnp.asarray(arr)
+    ShapeDtypeStructs). Returns (step, tree).
+
+    A truncated, overwritten, or otherwise corrupt file raises
+    ValueError naming the path — never garbage leaves: the zip/npz
+    structure, the metadata entry, and (when present — pre-digest
+    checkpoints still load) the CRC32 content digest are all checked
+    before anything is handed back."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"]))
+            raw = {}
+            for i, _k in enumerate(meta["keys"]):
+                raw[f"a{i}"] = np.asarray(z[f"a{i}"])
+    except Exception as e:
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: "
+            f"{type(e).__name__}: {e}") from e
+    want = meta.get("digest")
+    if want is not None:
+        got = _digest(raw, meta["keys"])
+        if got != want:
+            raise ValueError(
+                f"corrupt checkpoint {path!r}: content digest mismatch "
+                f"(stored {want:#010x}, recomputed {got:#010x})")
+    flat = {}
+    for i, k in enumerate(meta["keys"]):
+        arr = raw[f"a{i}"]
+        if meta["dtypes"].get(f"a{i}") == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        flat[k] = jnp.asarray(arr)
     ref = _flatten_with_paths(like)
     missing = set(ref) - set(flat)
     if missing:

@@ -70,6 +70,12 @@ class CompressionConfig:
     CommSchedule compiled from the active plan — backward-ready message
     order, buckets fused below the threshold (0 = per-bucket messages,
     math.inf = one message). Scheduling never changes numerics.
+
+    `integrity` (wire paths only) adds the Fletcher-32 header word to
+    every fused wire message — 4 bytes/message of wire overhead, zero
+    change to payloads or decoded numerics — so receivers can verify
+    packed bytes before decoding (core.wire.verify_message; what the
+    resilience plane's corruption detection rides on).
     """
     qw: Compressor = Identity()
     qm: Compressor = Identity()
@@ -78,6 +84,7 @@ class CompressionConfig:
     error_feedback: bool = False
     wire_dtype: str = "float32"  # dense/rs wire format: float32 | bfloat16
     fusion_bytes: Optional[float] = None
+    integrity: bool = False
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -251,7 +258,8 @@ def _wire_codec_for(cfg: CompressionConfig, allgather_available=True):
         raise ValueError(
             f"wire=True supports the simulated/allgather/ring/rs_stream "
             f"strategies, not {cfg.strategy!r}")
-    codec = wire_codec(cfg.qw, wire_dtype=cfg.wire_dtype)
+    codec = wire_codec(cfg.qw, wire_dtype=cfg.wire_dtype,
+                       integrity=cfg.integrity)
     if cfg.strategy == "simulated" and not codec.exact_sim:
         hint = ("run it under strategy='allgather', whose collective "
                 "carries the real (capacity-bounded / bf16-cast) payload"
@@ -308,7 +316,9 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                          telemetry_entire_model: bool = True,
                          wire: bool = False,
                          recorder=None,
-                         stream_chunk_bytes: Optional[float] = None):
+                         stream_chunk_bytes: Optional[float] = None,
+                         faults=None,
+                         alive=None):
     """Aggregate data-parallel gradients with bidirectional compression.
 
     Must be called inside shard_map. Returns (grads_hat, new_ef_state) —
@@ -340,6 +350,14 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
     `rs_stream` the compress→reduce-scatter→allgather shard pipeline.
     `stream_chunk_bytes` sets their per-hop dispatch granularity
     (None = whole-message hops).
+
+    `faults` (duck-typed, resil.FaultInjector; wire=True only) corrupts
+    the received packed bytes — the caller drains the injector's
+    verdict stream (take_flags) inside the same trace. `alive`
+    (strategy='dense' only) is a static per-worker participation mask:
+    the mean renormalizes over surviving workers (the straggler-timeout
+    partial-participation policy); compressed strategies keep full
+    participation — exclude workers in the simulated harness instead.
     """
     axis_names = tuple(axis_names)
     if plan is None and schedule is not None:
@@ -349,6 +367,14 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
             f"strategy {cfg.strategy!r} is the streaming collective over "
             f"PACKED wire buffers — pass wire=True (the unpacked payload "
             f"pytrees have no single buffer to ring-permute)")
+    if faults is not None and not wire:
+        raise ValueError("fault injection acts on PACKED wire bytes — "
+                         "pass wire=True")
+    if alive is not None and cfg.strategy != "dense":
+        raise ValueError(
+            "partial participation (alive=...) is implemented for the "
+            "dense strategy here; for compressed aggregation use the "
+            "simulated-worker harness (aggregate_simulated_workers)")
 
     def ret(agg, ef):
         if telemetry_plan is None:
@@ -363,6 +389,19 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                 "moves raw tensors — there is no compressed payload to "
                 "pack; use strategy='simulated' with an identity "
                 "compressor for a packed dense-f32 baseline")
+        if alive is not None:
+            # renormalized mean over survivors: each device scales its
+            # contribution by its own alive flag; the divisor is the
+            # (static) survivor count
+            w = jnp.asarray(alive, jnp.float32)
+            me = w[jax.lax.axis_index(axis_names)]
+            denom = float(sum(1.0 for a in alive if a))
+            agg = jax.tree_util.tree_map(
+                lambda g: (jax.lax.psum(
+                    _wire(g, cfg) * me.astype(_wire(g, cfg).dtype),
+                    axis_names) / denom).astype(g.dtype),
+                grads)
+            return ret(agg, ef_state)
         agg = jax.tree_util.tree_map(
             lambda g: _mean_psum(_wire(g, cfg), axis_names,
                                  n_workers).astype(g.dtype),
@@ -393,12 +432,13 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                     stream_post, grads, ef_state, key, wire=codec,
                     axis_names=axis_names, n_workers=n_workers, mode=mode,
                     wire_key=wk, chunk_bytes=stream_chunk_bytes,
-                    recorder=recorder)
+                    recorder=recorder, faults=faults)
                 return ret(agg, ef)
             agg, _bufs = sched.execute_streaming(
                 stream_post, grads, key, wire=codec, axis_names=axis_names,
                 n_workers=n_workers, mode=mode, wire_key=wk,
-                chunk_bytes=stream_chunk_bytes, recorder=recorder)
+                chunk_bytes=stream_chunk_bytes, recorder=recorder,
+                faults=faults)
             return ret(agg, ef_state)
         post = _wire_post(cfg, axis_names, codec, n_workers)
         if cfg.error_feedback:
@@ -406,10 +446,11 @@ def compressed_allreduce(grads, stacked, cfg: CompressionConfig,
                 raise ValueError("error_feedback=True requires ef_state")
             agg, ef, _bufs = sched.execute_with_state(
                 post, grads, ef_state, key, wire=codec, wire_key=wk,
-                recorder=recorder)
+                recorder=recorder, faults=faults)
             return ret(agg, ef)
         agg, _bufs = sched.execute(post, grads, key, wire=codec,
-                                   wire_key=wk, recorder=recorder)
+                                   wire_key=wk, recorder=recorder,
+                                   faults=faults)
         return ret(agg, ef_state)
 
     if cfg.error_feedback:
@@ -441,7 +482,9 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
                                 schedule: Optional[CommSchedule] = None,
                                 telemetry_plan: Optional[UnitPlan] = None,
                                 telemetry_entire_model: bool = True,
-                                wire: bool = False):
+                                wire: bool = False,
+                                faults=None,
+                                alive=None):
     """Single-device realization of Algorithm 1 for the paper-repro
     experiments: `worker_grads` leaves carry a leading worker axis n.
 
@@ -457,8 +500,27 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
     compression pass as real bit-packed message buffers (core.wire) —
     bit-identical output; the master Q_M pass stays dense (it never
     leaves the device in Algorithm 1's master step).
+
+    Resilience hooks (both default None = the unchanged graph):
+
+    `faults` (resil.FaultInjector; requires wire=True) corrupts each
+    worker's RECEIVED message bytes; with cfg.integrity the Fletcher-32
+    verdicts are drained inside the vmapped per-worker pass and the
+    return value grows a LAST element, a fault-info dict of traced
+    counters {"messages", "corrupt_detected", "resends"} summed over
+    workers (resends counts detected-and-replaced messages when the
+    injector models resend).
+
+    `alive` (bool (n,), host-side) renormalizes the aggregation mean
+    over surviving workers (straggler-timeout partial participation);
+    dead workers' EF residuals are FROZEN at their previous value — an
+    excluded worker never saw its payload applied, so its error memory
+    must not advance.
     """
     n = jax.tree_util.tree_leaves(worker_grads)[0].shape[0]
+    if faults is not None and not wire:
+        raise ValueError("fault injection acts on PACKED wire bytes — "
+                         "pass wire=True")
     if plan is None and schedule is not None:
         plan = schedule.plan
     if plan is None:
@@ -479,12 +541,17 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
     def per_worker(g_i, i):
         wkey = jax.random.fold_in(key, i)
         if codec is not None:
-            out, _bufs = wire_sched.execute(None, g_i, wkey, wire=codec)
-            return out
+            out, _bufs = wire_sched.execute(None, g_i, wkey, wire=codec,
+                                            faults=faults)
+            # drain the integrity verdicts INSIDE the vmapped trace —
+            # they are this trace's tracers and leave only as outputs
+            flags = (faults.take_flags() if faults is not None
+                     else jnp.zeros((0,), jnp.bool_))
+            return out, flags
 
         def fn(x, ukey):
             return cfg.qw.sim(x, ukey)
-        return ex.execute(fn, g_i, wkey)
+        return ex.execute(fn, g_i, wkey), jnp.zeros((0,), jnp.bool_)
 
     if cfg.error_feedback:
         if ef_state is None:
@@ -494,29 +561,60 @@ def aggregate_simulated_workers(worker_grads, stacked, cfg: CompressionConfig,
             wkey = jax.random.fold_in(key, i)
             if codec is not None:
                 out, m_new, _bufs = wire_sched.execute_with_state(
-                    None, g_i, m_i, wkey, wire=codec)
-                return out, m_new
+                    None, g_i, m_i, wkey, wire=codec, faults=faults)
+                flags = (faults.take_flags() if faults is not None
+                         else jnp.zeros((0,), jnp.bool_))
+                return out, m_new, flags
 
             def fn(x, m, ukey):
                 e = x + m
                 q = cfg.qw.sim(e, ukey)
                 return q, e - q
-            return ex.execute_with_state(fn, g_i, m_i, wkey)
-        compressed, new_ef = jax.vmap(per_worker_ef, in_axes=(0, 0, 0))(
-            worker_grads, ef_state, jnp.arange(n))
+            out, m_new = ex.execute_with_state(fn, g_i, m_i, wkey)
+            return out, m_new, jnp.zeros((0,), jnp.bool_)
+        compressed, new_ef, flags = jax.vmap(
+            per_worker_ef, in_axes=(0, 0, 0))(worker_grads, ef_state,
+                                              jnp.arange(n))
+        if alive is not None:
+            # a timed-out worker's payload never reached the reduce, so
+            # its error memory must not advance: freeze its residual
+            amask = jnp.asarray(alive, jnp.bool_)
+            new_ef = jax.tree_util.tree_map(
+                lambda nm, om: jnp.where(
+                    amask.reshape((n,) + (1,) * (nm.ndim - 1)), nm, om),
+                new_ef, ef_state)
     else:
-        compressed = jax.vmap(per_worker, in_axes=(0, 0))(
+        compressed, flags = jax.vmap(per_worker, in_axes=(0, 0))(
             worker_grads, jnp.arange(n))
         new_ef = ef_state
 
-    mean = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), compressed)
+    if alive is None:
+        mean = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0),
+                                      compressed)
+    else:
+        # partial participation: mean renormalized over survivors
+        w = jnp.asarray(alive, jnp.float32)
+        w = w / jnp.sum(w)
+        mean = jax.tree_util.tree_map(
+            lambda g: jnp.tensordot(w, g.astype(jnp.float32),
+                                    axes=1).astype(g.dtype), compressed)
 
     def master_fn(x, ukey):
         return cfg.qm.sim(x, _master_key(ukey))
     out = ex.execute(master_fn, mean, key)
-    if telemetry_plan is None:
-        return out, new_ef
-    gbar = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0),
-                                  worker_grads)
-    return out, new_ef, _telemetry_inc(telemetry_plan, cfg, gbar, out, key,
-                                       telemetry_entire_model)
+    rets = [out, new_ef]
+    if telemetry_plan is not None:
+        gbar = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0),
+                                      worker_grads)
+        rets.append(_telemetry_inc(telemetry_plan, cfg, gbar, out, key,
+                                   telemetry_entire_model))
+    if faults is not None:
+        detected = jnp.sum(~flags) if flags.size else jnp.zeros((), jnp.int32)
+        rets.append({
+            "messages": jnp.asarray(flags.size, jnp.int32),
+            "corrupt_detected": detected.astype(jnp.int32),
+            "resends": (detected.astype(jnp.int32)
+                        if getattr(faults, "resend", False)
+                        else jnp.zeros((), jnp.int32)),
+        })
+    return tuple(rets)

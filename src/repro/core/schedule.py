@@ -138,7 +138,8 @@ class CommSchedule:
 
     # ---- execution -------------------------------------------------------
     def execute(self, fn: Callable[[Array, Array], Array], grads,
-                key: Array, *, wire=None, wire_key=None, recorder=None):
+                key: Array, *, wire=None, wire_key=None, recorder=None,
+                faults=None):
         """UnitPlan.execute, streamed: identical per-bucket dispatches and
         PRNG keys, issued message by message in backward-ready order with
         an ordering barrier between consecutive messages. Bit-identical
@@ -161,12 +162,19 @@ class CommSchedule:
         stream with per-message spans (or per-stage spans in wire mode);
         None or a disabled recorder leaves the traced graph untouched —
         the zero-overhead contract tests/test_obs.py compares jaxprs
-        over."""
+        over.
+
+        `faults` (duck-typed, resil.FaultInjector; wire mode only)
+        corrupts each message's received bytes after pack — see
+        core.wire.execute_schedule_wire."""
         if wire is not None:
             from repro.core.wire import execute_schedule_wire
             return execute_schedule_wire(self, wire, fn, grads, key,
                                          wire_key=wire_key,
-                                         recorder=recorder)
+                                         recorder=recorder, faults=faults)
+        if faults is not None:
+            raise ValueError("fault injection needs the wire path "
+                             "(wire=codec): faults act on packed bytes")
         rec = (recorder if recorder is not None
                and getattr(recorder, "enabled", False) else None)
         plan = self.plan
@@ -205,7 +213,8 @@ class CommSchedule:
         return plan._assemble(out_leaves, out_flat)
 
     def execute_with_state(self, fn, grads, state, key: Array, *,
-                           wire=None, wire_key=None, recorder=None):
+                           wire=None, wire_key=None, recorder=None,
+                           faults=None):
         """UnitPlan.execute_with_state, streamed (error-feedback memory
         threads through untouched by ordering/fusion: every unit's state
         row is read and written exactly once, in whichever message its
@@ -215,12 +224,17 @@ class CommSchedule:
         EF discipline is fixed to e = x + m, m' = e - decode(payload)
         (bit-identical to the unpacked path by the round-trip property),
         `fn` is the post-decode closure (or None), and the return value
-        grows to (tree, m_tree, buffers)."""
+        grows to (tree, m_tree, buffers). `faults` (wire mode only)
+        corrupts received bytes; the EF residual stays sender-side
+        clean — see core.wire.execute_schedule_wire_with_state."""
         if wire is not None:
             from repro.core.wire import execute_schedule_wire_with_state
             return execute_schedule_wire_with_state(
                 self, wire, fn, grads, state, key, wire_key=wire_key,
-                recorder=recorder)
+                recorder=recorder, faults=faults)
+        if faults is not None:
+            raise ValueError("fault injection needs the wire path "
+                             "(wire=codec): faults act on packed bytes")
         rec = (recorder if recorder is not None
                and getattr(recorder, "enabled", False) else None)
         plan = self.plan
@@ -279,7 +293,8 @@ class CommSchedule:
 
     def execute_streaming(self, post, grads, key: Array, *, wire,
                           axis_names, n_workers: int, mode: str = "ring",
-                          wire_key=None, chunk_bytes=None, recorder=None):
+                          wire_key=None, chunk_bytes=None, recorder=None,
+                          faults=None):
         """Execute the schedule through a REAL streaming collective: a
         chunked-ppermute ring (mode='ring') or a compress→reduce-scatter→
         allgather shard stream (mode='rs') under shard_map, double-
@@ -292,17 +307,19 @@ class CommSchedule:
         Returns (tree, buffers). mode='ring' is bit-identical to
         `execute(..., wire=...)` under the allgather strategy — the
         correctness contract tests/test_stream.py holds differentially.
-        See core.wire.execute_schedule_stream for the full mechanics."""
+        See core.wire.execute_schedule_stream for the full mechanics
+        (including `faults`, the per-hop corruption injector)."""
         from repro.core.wire import execute_schedule_stream
         return execute_schedule_stream(
             self, wire, post, grads, None, key, axis_names=axis_names,
             n_workers=n_workers, mode=mode, wire_key=wire_key,
-            chunk_bytes=chunk_bytes, recorder=recorder)
+            chunk_bytes=chunk_bytes, recorder=recorder, faults=faults)
 
     def execute_streaming_with_state(self, post, grads, state, key: Array,
                                      *, wire, axis_names, n_workers: int,
                                      mode: str = "ring", wire_key=None,
-                                     chunk_bytes=None, recorder=None):
+                                     chunk_bytes=None, recorder=None,
+                                     faults=None):
         """Error-feedback twin of execute_streaming: e = x + m is
         encoded, m' = e - decode(own payload) — the same local EF
         discipline as the serialized wire path (EF never depends on the
@@ -313,7 +330,7 @@ class CommSchedule:
         return execute_schedule_stream(
             self, wire, post, grads, state, key, axis_names=axis_names,
             n_workers=n_workers, mode=mode, wire_key=wire_key,
-            chunk_bytes=chunk_bytes, recorder=recorder)
+            chunk_bytes=chunk_bytes, recorder=recorder, faults=faults)
 
 
 # ==========================================================================

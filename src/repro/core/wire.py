@@ -127,6 +127,53 @@ def _u8_rows_to_u32(b: Array) -> Array:
 
 
 # --------------------------------------------------------------------------
+# wire integrity: in-graph Fletcher-32 over packed bytes
+# --------------------------------------------------------------------------
+# The per-message checksum lives in the uint32 header (MessageLayout with
+# checksum=True). Format: Fletcher-32 over little-endian 16-bit words with
+# Adler-style initialization (sum1 starts at 1), so an all-zero buffer —
+# e.g. a dropped ring hop — never verifies against a zeroed header word,
+# and the length rides in sum2 (truncation-to-zeros is detected). Any
+# single bit flip changes its 16-bit word by ±2^k, which is never ≡ 0
+# mod 65535, so single-bit corruption in the covered bytes is ALWAYS
+# detected (the detection gate bench-faults asserts). Fully vectorized:
+# sum2 = 1·L + Σ_i (L−i)·w_i uses weighted products < 2^32 with staged
+# mod-65535 chunk reductions instead of the byte-serial reference loop.
+
+_FLETCHER_MOD = 65535
+_FLETCHER_CHUNK = 65536  # 65536 addends < 65535 each stay under 2^32
+
+
+def _mod65535_sum(x: Array) -> Array:
+    """Sum of uint32 values each < 65535, mod 65535, without overflow:
+    staged chunk sums (each chunk sum < 2^32) reduced mod 65535."""
+    while x.size > _FLETCHER_CHUNK:
+        pad = (-x.size) % _FLETCHER_CHUNK
+        x = jnp.pad(x, (0, pad)).reshape(-1, _FLETCHER_CHUNK)
+        x = x.sum(axis=1, dtype=jnp.uint32) % jnp.uint32(_FLETCHER_MOD)
+    return x.sum(dtype=jnp.uint32) % jnp.uint32(_FLETCHER_MOD)
+
+
+def fletcher32(payload_u8: Array) -> Array:
+    """In-graph Fletcher-32 (init=1 variant) of a uint8 buffer -> uint32
+    scalar. Pure jnp — traced, vmappable, identical on host and device."""
+    b = payload_u8.reshape(-1).astype(jnp.uint32)
+    if b.size % 2:
+        b = jnp.pad(b, (0, 1))
+    words = (b[0::2] | (b[1::2] << 8)) % jnp.uint32(_FLETCHER_MOD)
+    nw = words.shape[0]
+    # with s1_0 = 1, s2_0 = 0 and per word s1 += w, s2 += s1:
+    # sum1 = 1 + Σ w_i;  sum2 = Σ_j s1_j = nw + Σ_i (nw - i)·w_i
+    coef = jnp.arange(nw, 0, -1, dtype=jnp.uint32) % jnp.uint32(
+        _FLETCHER_MOD)
+    s1 = (jnp.uint32(1) + _mod65535_sum(words)) % jnp.uint32(_FLETCHER_MOD)
+    s2 = (jnp.uint32(nw % _FLETCHER_MOD)
+          + _mod65535_sum((coef * words) % jnp.uint32(_FLETCHER_MOD))
+          ) % jnp.uint32(_FLETCHER_MOD)
+    return (s2 << 16) | s1
+
+
+# --------------------------------------------------------------------------
 # value-record legs: f32, or the bf16 wire cast (wire_dtype="bfloat16")
 # --------------------------------------------------------------------------
 # The to_f32/to_bf16 idiom: the wire carries bf16 (2 bytes/record, a
@@ -233,6 +280,14 @@ class WireCodec:
     dense and sparse codecs have value records to cast; the others
     raise.
 
+    `integrity=True` reserves one extra uint32 header word per fused
+    message for a Fletcher-32 checksum (see fletcher32) over everything
+    after it (offset table + packed payloads), computed at pack and
+    verified at decode on both the serialized and streaming ring paths.
+    It changes only the MESSAGE header layout — per-unit payload bytes
+    (`nbytes`) and the codec math are untouched, so the decoded numerics
+    are bit-identical with integrity on or off.
+
     `exact_sim`: decode(encode(x, key)) == comp.sim(x, key) bit for bit.
     True for every codec except the capacity-bounded threshold records
     and the bf16 value-cast variants.
@@ -241,6 +296,7 @@ class WireCodec:
     use_pallas: bool = False
     fused: bool = True
     wire_dtype: str = "float32"
+    integrity: bool = False
 
     #: codecs whose value-record legs support the bf16 wire cast
     _SUPPORTS_BF16 = False
@@ -685,14 +741,18 @@ class SparseCodec(WireCodec):
 
 def wire_codec(comp: Compressor, use_pallas: bool = False,
                fused: bool = True,
-               wire_dtype: str = "float32") -> WireCodec:
+               wire_dtype: str = "float32",
+               integrity: bool = False) -> WireCodec:
     """The WireCodec materializing `comp`'s payloads. Raises ValueError
     for compressors with no static wire realization. `fused=True`
     (default) routes the batch dispatches through the single-launch
     compress+pack kernels; `fused=False` vmaps the per-unit reference.
     `wire_dtype="bfloat16"` casts f32 value records to bf16 on the wire
-    (dense/sparse codecs only — the quantized codecs raise)."""
-    kw = dict(use_pallas=use_pallas, fused=fused, wire_dtype=wire_dtype)
+    (dense/sparse codecs only — the quantized codecs raise).
+    `integrity=True` adds the Fletcher-32 header word per fused message
+    (4 bytes/message; payloads and numerics unchanged)."""
+    kw = dict(use_pallas=use_pallas, fused=fused, wire_dtype=wire_dtype,
+              integrity=integrity)
     base = comp.base if hasattr(comp, "base") else comp  # PerDimRatio
     if isinstance(base, (TopK, RandomK)):
         return SparseCodec(comp=comp, **kw)
@@ -733,12 +793,24 @@ class MessageLayout:
     bucket from the buffer alone. `unit_nbytes[j]` is the per-unit
     payload size of bucket j; its region holds n_units back-to-back
     records.
+
+    With `checksum=True` (codec.integrity) the header is
+    [n_buckets, fletcher32, byte_offset_0, ...]: one extra uint32 word
+    holding the Fletcher-32 of every byte AFTER it (offset table +
+    payloads — see `checksum_span_start`), so a receiver can verify the
+    whole message before decoding. Offsets stay absolute, so region
+    slicing is layout-agnostic.
     """
     bucket_ids: Tuple[int, ...]
     offsets: Tuple[int, ...]
     unit_nbytes: Tuple[int, ...]
     header_nbytes: int
     total_nbytes: int
+    checksum: bool = False
+
+    #: byte offset where the checksummed span begins (after the
+    #: [n_buckets, fletcher32] words)
+    checksum_span_start = 8
 
     @property
     def payload_nbytes(self) -> int:
@@ -751,7 +823,7 @@ def message_layouts(schedule, codec: WireCodec) -> Tuple[MessageLayout, ...]:
     plan = schedule.plan
     outs = []
     for msg in schedule.messages:
-        header = 4 * (1 + len(msg.bucket_ids))
+        header = 4 * (1 + int(codec.integrity) + len(msg.bucket_ids))
         off = header
         offs, unb = [], []
         for bi in msg.bucket_ids:
@@ -761,7 +833,7 @@ def message_layouts(schedule, codec: WireCodec) -> Tuple[MessageLayout, ...]:
             unb.append(nb)
             off += b.n * nb
         outs.append(MessageLayout(msg.bucket_ids, tuple(offs), tuple(unb),
-                                  header, off))
+                                  header, off, checksum=codec.integrity))
     return tuple(outs)
 
 
@@ -790,10 +862,76 @@ def _dispatch_post(fn, b, payload, xhat, keys):
 
 
 def _message_buffer(layout: MessageLayout, payload_mats) -> Array:
-    header = jnp.asarray((len(layout.bucket_ids),) + layout.offsets,
-                         jnp.uint32)
-    return jnp.concatenate([_u32_to_u8(header)]
-                           + [p.reshape(-1) for p in payload_mats])
+    if not layout.checksum:
+        header = jnp.asarray((len(layout.bucket_ids),) + layout.offsets,
+                             jnp.uint32)
+        return jnp.concatenate([_u32_to_u8(header)]
+                               + [p.reshape(-1) for p in payload_mats])
+    # integrity layout: [n_buckets, fletcher32 | offsets ++ payloads],
+    # the checksum covering everything after its own word
+    tail = jnp.concatenate(
+        [_u32_to_u8(jnp.asarray(layout.offsets, jnp.uint32))]
+        + [p.reshape(-1) for p in payload_mats])
+    head = jnp.stack([jnp.uint32(len(layout.bucket_ids)),
+                      fletcher32(tail)])
+    return jnp.concatenate([_u32_to_u8(head), tail])
+
+
+def verify_message(buf: Array, layout: MessageLayout) -> Array:
+    """In-graph integrity check of one fused message buffer -> bool
+    scalar: recompute Fletcher-32 over the covered span and compare to
+    the stored header word. Requires layout.checksum."""
+    if not layout.checksum:
+        raise ValueError("verify_message needs a checksum layout "
+                         "(codec.integrity=True)")
+    stored = _u8_to_u32(buf[4:8])[0]
+    return stored == fletcher32(buf[layout.checksum_span_start:])
+
+
+def parse_message_header(buf, *, checksum: bool = False):
+    """Host-side hardened header parse of one fused message buffer.
+
+    Returns (n_buckets, offsets) after bounds-checking every field a
+    receiver would slice with — a malformed header raises ValueError
+    instead of decoding garbage: the buffer must hold a whole header,
+    the bucket count must be positive and fit, the first offset must
+    land exactly past the header, and offsets must be non-decreasing
+    and within the buffer. `checksum=True` parses the integrity layout
+    ([n_buckets, fletcher32, offsets...]); the checksum VALUE is the
+    in-graph verify_message's job — this validates structure only.
+    """
+    import numpy as np
+    b = np.asarray(buf, dtype=np.uint8).reshape(-1)
+    total = b.size
+    if total < 4 or total % 4:
+        raise ValueError(
+            f"message buffer must be a whole number of uint32 words and "
+            f"hold at least the bucket count; got {total} bytes")
+    words = b.view("<u4")
+    n_buckets = int(words[0])
+    lead = 1 + int(bool(checksum))
+    header = 4 * (lead + n_buckets)
+    if n_buckets < 1 or header > total:
+        raise ValueError(
+            f"malformed header: n_buckets={n_buckets} needs "
+            f"{header} header bytes but the buffer has {total}")
+    offsets = tuple(int(o) for o in words[lead:lead + n_buckets])
+    if offsets[0] != header:
+        raise ValueError(
+            f"malformed header: first bucket offset {offsets[0]} != "
+            f"header end {header}")
+    prev = offsets[0]
+    for j, off in enumerate(offsets[1:], start=1):
+        if off < prev:
+            raise ValueError(
+                f"malformed header: offset[{j}]={off} < "
+                f"offset[{j - 1}]={prev} (must be non-decreasing)")
+        prev = off
+    if prev > total:
+        raise ValueError(
+            f"malformed header: offset[{n_buckets - 1}]={prev} beyond "
+            f"buffer end {total}")
+    return n_buckets, offsets
 
 
 def _bucket_region(buf: Array, layout: MessageLayout, j: int,
@@ -810,10 +948,31 @@ def _active_recorder(recorder):
     return None
 
 
+def _receive_buffer(buf, layout, faults, key, tag):
+    """The receive leg of one fused message under fault injection:
+    corrupt the arrived bytes (payload span only — the injector draws
+    from its own seeded stream), verify the Fletcher-32 header word,
+    optionally model re-encode-and-resend (the sender still holds the
+    clean buffer, so a verified-failed message is replaced by it), and
+    note the verdict on the injector. `faults=None` (or a pass-through
+    injector) returns `buf` unchanged — the traced graph is byte-
+    identical to the fault-free path."""
+    rbuf = faults.corrupt(buf, key, tag=tag,
+                          start=layout.header_nbytes)
+    if rbuf is buf:
+        return buf
+    if layout.checksum:
+        ok = verify_message(rbuf, layout)
+        if getattr(faults, "resend", False):
+            rbuf = jnp.where(ok, rbuf, buf)
+        faults.note(tag, ok)
+    return rbuf
+
+
 def execute_schedule_wire(schedule, codec: WireCodec,
                           fn: Optional[Callable], grads, key: Array,
                           wire_key: Optional[Callable] = None,
-                          recorder=None):
+                          recorder=None, faults=None):
     """Stream a CommSchedule through REAL wire buffers.
 
     Per message: encode every member bucket's units (per-unit plan keys,
@@ -830,6 +989,11 @@ def execute_schedule_wire(schedule, codec: WireCodec,
     `recorder` (duck-typed, obs.trace.TraceRecorder) emits per-message
     compress/pack/decode (+ collective when `fn` is given) stage spans;
     None or a disabled recorder leaves the traced graph untouched.
+
+    `faults` (duck-typed, resil.FaultInjector) corrupts each message's
+    RECEIVED bytes after pack (see _receive_buffer); the returned
+    `buffers` and the streaming token keep the clean sender-side copy.
+    None leaves the traced graph untouched.
     """
     from repro.core.schedule import _order_after
     rec = _active_recorder(recorder)
@@ -871,11 +1035,13 @@ def execute_schedule_wire(schedule, codec: WireCodec,
             rec.mark(buf, "pack", **attrs)
         buffers.append(buf)
         token = buf
+        rbuf = (buf if faults is None
+                else _receive_buffer(buf, layout, faults, key, mi))
         pays, xhats = [], []
         with _scope("decode"):
             for j, bi in enumerate(msg.bucket_ids):
                 b = plan.buckets[bi]
-                pay = _bucket_region(buf, layout, j, b.n)
+                pay = _bucket_region(rbuf, layout, j, b.n)
                 pays.append(pay)
                 xhats.append(_dispatch_decode(codec, b, pay))
         if rec is not None:
@@ -900,7 +1066,7 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
                                      fn: Optional[Callable], grads, state,
                                      key: Array,
                                      wire_key: Optional[Callable] = None,
-                                     recorder=None):
+                                     recorder=None, faults=None):
     """Error-feedback twin of execute_schedule_wire: per unit,
     e = x + m is encoded, the residual m' = e - decode(payload) (exactly
     the unpacked EF discipline since the round-trip is bit-exact), and
@@ -908,7 +1074,13 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
     codec.decode_ef_batch — with a fused codec that is ONE unpack kernel
     launch per bucket plus the caller-regime residual subtract. Returns
     (tree, m_tree, buffers). `recorder` instruments the stream exactly
-    as in execute_schedule_wire, plus an `ef_update` span per message."""
+    as in execute_schedule_wire, plus an `ef_update` span per message.
+
+    `faults` corrupts the RECEIVED bytes only (see _receive_buffer) —
+    the EF residual is SENDER-side state and is always computed from the
+    clean buffer (the sender knows exactly what it encoded), so wire
+    corruption can poison one step's decoded gradient but never the
+    error-feedback discipline."""
     from repro.core.schedule import _order_after
     rec = _active_recorder(recorder)
     plan = schedule.plan
@@ -959,12 +1131,22 @@ def execute_schedule_wire_with_state(schedule, codec: WireCodec,
             rec.mark(buf, "pack", **attrs)
         buffers.append(buf)
         token = buf
+        rbuf = (buf if faults is None
+                else _receive_buffer(buf, layout, faults, key, mi))
         pays, ehats, mns = [], [], []
         with _scope("decode"):
             for j, bi in enumerate(msg.bucket_ids):
                 b = plan.buckets[bi]
                 pay = _bucket_region(buf, layout, j, b.n)
-                ehat, mn = codec.decode_ef_batch(pay, es[j], b.dim)
+                if rbuf is buf:
+                    ehat, mn = codec.decode_ef_batch(pay, es[j], b.dim)
+                else:
+                    # residual from the CLEAN sender-side payload; the
+                    # receiver's view decodes the (possibly corrupt,
+                    # possibly resent) wire bytes
+                    _, mn = codec.decode_ef_batch(pay, es[j], b.dim)
+                    pay = _bucket_region(rbuf, layout, j, b.n)
+                    ehat = codec.decode_batch(pay, b.dim)
                 pays.append(pay)
                 ehats.append(ehat)
                 mns.append(mn)
@@ -1010,7 +1192,7 @@ def shard_message_layouts(schedule, codec: WireCodec,
     plan = schedule.plan
     outs = []
     for msg in schedule.messages:
-        header = 4 * (1 + len(msg.bucket_ids))
+        header = 4 * (1 + int(codec.integrity) + len(msg.bucket_ids))
         off = header
         offs, unb = [], []
         for bi in msg.bucket_ids:
@@ -1020,7 +1202,7 @@ def shard_message_layouts(schedule, codec: WireCodec,
             unb.append(nb)
             off += b.n * nb
         outs.append(MessageLayout(msg.bucket_ids, tuple(offs), tuple(unb),
-                                  header, off))
+                                  header, off, checksum=codec.integrity))
     return tuple(outs)
 
 
@@ -1055,7 +1237,7 @@ def execute_schedule_stream(schedule, codec: WireCodec,
                             mode: str = "ring",
                             wire_key: Optional[Callable] = None,
                             chunk_bytes: Optional[float] = None,
-                            recorder=None):
+                            recorder=None, faults=None):
     """Stream a CommSchedule through a chunked-ppermute ring collective.
 
     The real-overlap twin of execute_schedule_wire: per fused message the
@@ -1113,6 +1295,15 @@ def execute_schedule_stream(schedule, codec: WireCodec,
     what obs.calibrate.measure_stream aggregates into measured exposed
     comm. Under a multi-device shard_map every mark stamps once per
     device; finalize_step(dedupe=True) collapses them.
+
+    `faults` (duck-typed, resil.FaultInjector) corrupts each ARRIVING
+    hop's bytes (mode="ring"): bit flips / truncation on the permuted
+    chunks, drop-to-zeros, or a duplicated (stale) hop; with a checksum
+    layout the hop is verified on arrival and optionally "resent"
+    (reverted to the clean arrived copy). A duplicated hop is a VALID
+    stale message — the checksum passes by construction; catching it
+    needs sequence numbers (documented limitation). None leaves the
+    traced graph untouched.
     """
     from repro.core.schedule import _order_after
     axis_names = tuple(axis_names)
@@ -1249,7 +1440,26 @@ def execute_schedule_stream(schedule, codec: WireCodec,
             cur = _order_after(cur, state_tok["ctok"])
             for h in range(1, n):
                 with _scope(mi, f"hop{h}"):
+                    stale = cur
                     cur = [jax.lax.ppermute(c, axis, perm) for c in cur]
+                    if faults is not None:
+                        # fault the arriving hop: chunks tile [0, total),
+                        # so their concatenation IS the message buffer;
+                        # `stale` (the pre-permute content this worker
+                        # already forwarded) models a duplicated hop,
+                        # and resend reverts to the clean arrived copy
+                        abuf = jnp.concatenate(cur)
+                        rbuf = faults.corrupt_hop(
+                            abuf, jnp.concatenate(stale), key,
+                            tag=(mi << 12) | h,
+                            start=layout.header_nbytes)
+                        if rbuf is not abuf:
+                            if layout.checksum:
+                                ok = verify_message(rbuf, layout)
+                                if getattr(faults, "resend", False):
+                                    rbuf = jnp.where(ok, rbuf, abuf)
+                                faults.note((mi << 12) | h, ok)
+                            cur = [rbuf[s:e] for (_, s, e) in chunks]
                     src = jnp.mod(my - h, n)
                     for (run, start, _), cbuf in zip(chunks, cur):
                         for j in run:

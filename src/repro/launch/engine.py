@@ -281,7 +281,8 @@ class Engine:
                          telemetry_entire_model: bool = True,
                          schedule=None, wire: bool = False,
                          collective: Optional[str] = None,
-                         tracer=None, metrics=None):
+                         tracer=None, metrics=None,
+                         step_guard: bool = False):
         """The sharded, jitted train step.
 
         `comp` overrides the engine's CompressionConfig for THIS step
@@ -327,6 +328,12 @@ class Engine:
         `metrics` (obs.metrics.MetricsRegistry) receives build counters
         and static plan/schedule gauges. Both default to None — the
         traced graph is then bit-identical to the uninstrumented one.
+        `step_guard=True` makes the update self-protecting: if the loss
+        or ANY aggregated-gradient leaf is non-finite, the whole update
+        is dropped (params and optimizer state keep their pre-step
+        values) and the returned metrics carry `skipped=1.0`. The flag
+        is pmin-reduced over ALL mesh axes so every rank (including TP
+        peers that would otherwise diverge) takes the same branch.
         """
         model, cfg, opt = self.model, self.cfg, self.opt
         dist = self.dist
@@ -346,10 +353,10 @@ class Engine:
             rest_plan, _ = self.comm_plans(comp_eff)
             schedule = resolve_schedule(rest_plan, schedule)
         sched = lr_schedule or (lambda s: jnp.float32(self.opt.lr))
+        all_axes = tuple(self.mesh.axis_names)
         if telemetry:
             from repro.control.telemetry import accumulate, measure
             mplan = self.measurement_plan()
-            all_axes = tuple(self.mesh.axis_names)
 
         mb = max(1, cfg.train_microbatch)
 
@@ -397,10 +404,26 @@ class Engine:
                     lambda v: jax.lax.pmean(v, all_axes), inc)
                 telem = accumulate(telem, inc)
             lr = sched(step)
-            params, opt_state = apply_updates(opt, params, agg, opt_state,
-                                              lr)
+            new_params, new_opt = apply_updates(opt, params, agg,
+                                                opt_state, lr)
+            if step_guard:
+                finite = jnp.isfinite(loss)
+                for leaf in jax.tree_util.tree_leaves(agg):
+                    finite = finite & jnp.all(jnp.isfinite(leaf))
+                # every rank must take the same branch: a TP peer with a
+                # finite shard would otherwise diverge from one that saw
+                # the NaN
+                finite = jax.lax.pmin(finite.astype(jnp.int32),
+                                      all_axes) > 0
+                keep = lambda n, o: jnp.where(finite, n, o)
+                new_params = jax.tree_util.tree_map(keep, new_params,
+                                                    params)
+                new_opt = jax.tree_util.tree_map(keep, new_opt, opt_state)
+            params, opt_state = new_params, new_opt
             loss = jax.lax.pmean(loss, dist.dp)
             metrics = {"loss": loss, "lr": lr}
+            if step_guard:
+                metrics["skipped"] = 1.0 - finite.astype(jnp.float32)
             if telemetry:
                 return params, opt_state, metrics, telem
             return params, opt_state, metrics
@@ -412,6 +435,8 @@ class Engine:
         bs = self.batch_pspecs(
             InputShape("train", 1, self.dp_size, "train"))
         metrics_spec = {"loss": P(), "lr": P()}
+        if step_guard:
+            metrics_spec["skipped"] = P()
         if telemetry:
             mapped = shard_map(
                 step_fn, self.mesh,

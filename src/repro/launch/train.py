@@ -23,7 +23,7 @@ from repro.core import CompressionConfig, Granularity, make_compressor
 from repro.data import lm_batches, frames_stub, patches_stub
 from repro.launch.engine import Engine
 from repro.launch.mesh import make_host_mesh
-from repro.ckpt import save_checkpoint
+from repro.ckpt import latest_checkpoint, load_checkpoint, save_checkpoint
 from repro.optim import OptConfig, piecewise_linear
 
 
@@ -131,7 +131,21 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params/optimizer from the newest "
+                         "checkpoint in --ckpt-dir and continue from its "
+                         "step; the data stream is replayed to that step, "
+                         "so an uninterrupted run and a killed-and-resumed "
+                         "run produce bitwise-identical states")
+    ap.add_argument("--step-guard", action="store_true",
+                    help="drop any update whose loss or aggregated "
+                         "gradient is non-finite (params/optimizer keep "
+                         "their pre-step values); skipped steps are "
+                         "counted under resil/steps_skipped when "
+                         "--metrics-out is set")
     args = ap.parse_args(argv)
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume restores from --ckpt-dir; set it")
     if args.telemetry_out and not args.policy:
         args.policy = "static"  # telemetry collection needs the controller
 
@@ -143,6 +157,8 @@ def main(argv=None):
     sched = piecewise_linear(args.lr, args.steps, max(1, args.steps // 10))
     if args.wire and args.policy:
         ap.error("--wire is the static engine path; drop --policy")
+    if args.step_guard and args.policy:
+        ap.error("--step-guard is the static engine path; drop --policy")
     if args.collective and not args.wire:
         ap.error("--collective picks the wire collective's topology; "
                  "add --wire")
@@ -158,8 +174,19 @@ def main(argv=None):
             if args.policy else None)
     step_fn = None if ctrl else eng.build_train_step(
         sched, wire=args.wire, collective=args.collective, tracer=rec,
-        metrics=reg)
+        metrics=reg, step_guard=args.step_guard)
     params, opt_state = eng.init_state(args.seed)
+    start = 0
+    if args.resume:
+        ck = latest_checkpoint(args.ckpt_dir)
+        if ck is not None:
+            start, state = load_checkpoint(
+                ck, like={"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            print(f"resume: {ck} -> step {start}")
+        else:
+            print(f"resume: no checkpoint under {args.ckpt_dir!r}, "
+                  f"starting fresh")
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} params={n/1e6:.2f}M mesh={dict(eng.sizes)} "
           f"comp={comp.strategy}/{comp.qw.name}/{comp.granularity.kind}"
@@ -194,10 +221,12 @@ def main(argv=None):
               f"measurement — trust the message counts)")
 
     it = lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
-    key = jax.random.key(args.seed)
+    for _ in range(start):   # replay the stream to the resume point: the
+        next(it)             # resumed run sees the exact batches the
+    key = jax.random.key(args.seed)  # uninterrupted run would have
     with mesh:
         t0 = time.time()
-        for i in range(args.steps):
+        for i in range(start, args.steps):
             batch = next(it)
             if cfg.arch_type == "vlm":
                 batch["patch_embeds"] = patches_stub(
@@ -230,6 +259,8 @@ def main(argv=None):
                 rec.finalize_step(i)
             if reg is not None:
                 reg.inc("train/steps")
+                if args.step_guard:
+                    reg.inc("resil/steps_skipped", float(m["skipped"]))
                 reg.record(step=i)
             if i % max(1, args.steps // 20) == 0 or i == args.steps - 1:
                 print(f"step {i:5d} loss {float(m['loss']):.4f} "

@@ -1,0 +1,119 @@
+"""In-graph data-plane fault injection for packed wire buffers.
+
+A FaultInjector perturbs the uint8 bytes a receiver SEES — after
+encode+pack, before decode — exactly where a real fabric corrupts them.
+The sender-side buffer (measured wire truth, EF residuals, the
+streaming token) always stays clean; see core.wire._receive_buffer.
+
+Draws are pure functions of (step key, spec.seed, message/hop tag), so
+a faulted run is exactly reproducible and two runs sharing keys corrupt
+the same bytes — what lets the fault suite compare faulted-with-resend
+against clean runs bitwise.
+
+The injector is DUCK-TYPED against sim.scenario.CorruptionSpec (fields
+prob / mode / n_bits / seed) so this module never imports repro.sim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: modes acting on any received message (serialized or ring)
+BYTE_MODES = ("bitflip", "truncate")
+#: modes only meaningful for a ring hop (need the ring's topology)
+HOP_MODES = ("drop_hop", "dup_hop")
+CORRUPTION_MODES = BYTE_MODES + HOP_MODES
+
+
+class FaultInjector:
+    """Stateful per-trace injector: corrupt buffers in-graph, collect
+    the integrity verdicts the executors note, and hand them back as
+    one stacked bool array via `take_flags()`.
+
+    `note()` appends TRACED booleans, so `take_flags()` MUST be called
+    inside the same trace (e.g. inside the vmapped per-worker closure)
+    — flags returned functionally, never smuggled across a jit/vmap
+    boundary.
+
+    `resend=True` models re-encode-and-resend: a message whose checksum
+    fails is replaced by the sender's clean copy (the sender still
+    holds it), so the decoded numerics match the clean run bitwise
+    while the verdict stream still records the detection.
+    """
+
+    def __init__(self, spec, *, resend: bool = False):
+        if spec.mode not in CORRUPTION_MODES:
+            raise ValueError(f"unknown corruption mode {spec.mode!r}; "
+                             f"expected one of {CORRUPTION_MODES}")
+        self.spec = spec
+        self.resend = bool(resend)
+        self._events = []
+
+    # ---- seeded draws ----------------------------------------------------
+    def _key(self, key, tag: int):
+        k = jax.random.fold_in(key, 0xFA17)
+        k = jax.random.fold_in(k, int(self.spec.seed) & 0x7FFFFFFF)
+        return jax.random.fold_in(k, int(tag))
+
+    def _bitflip(self, buf, k, start: int):
+        k1, k2 = jax.random.split(k)
+        nb = int(self.spec.n_bits)
+        pos = jax.random.randint(k1, (nb,), start, buf.size)
+        bit = jax.random.randint(k2, (nb,), 0, 8).astype(jnp.uint8)
+        return buf.at[pos].set(buf[pos] ^ (jnp.uint8(1) << bit))
+
+    def _truncate(self, buf, k, start: int):
+        cut = jax.random.randint(k, (), start, buf.size)
+        return jnp.where(jnp.arange(buf.size) < cut, buf,
+                         jnp.uint8(0))
+
+    # ---- executor hooks --------------------------------------------------
+    def corrupt(self, buf, key, *, tag: int, start: int = 0):
+        """Maybe-corrupt one received message buffer (uint8 1-D).
+        `start` floors the perturbed span (the header words before the
+        checksummed region stay intact). Returns `buf` ITSELF (same
+        object) when this injector cannot touch it — prob 0 or a
+        hop-only mode — which is the executors' no-op fast path."""
+        if float(self.spec.prob) <= 0.0 or self.spec.mode in HOP_MODES:
+            return buf
+        k = self._key(key, tag)
+        k0, kd = jax.random.split(k)
+        hit = jax.random.bernoulli(k0, float(self.spec.prob))
+        dirty = (self._bitflip(buf, kd, start)
+                 if self.spec.mode == "bitflip"
+                 else self._truncate(buf, kd, start))
+        return jnp.where(hit, dirty, buf)
+
+    def corrupt_hop(self, arrived, stale, key, *, tag: int,
+                    start: int = 0):
+        """Maybe-corrupt one ARRIVING ring hop. `arrived` is the
+        post-ppermute buffer, `stale` the pre-permute content this
+        worker already held (what a duplicated hop re-delivers).
+        drop_hop zeroes the whole message — detected because the
+        Fletcher init=1 checksum of an all-zero span is nonzero;
+        dup_hop delivers `stale`, a VALID stale message whose checksum
+        passes (catching it needs sequence numbers)."""
+        if float(self.spec.prob) <= 0.0:
+            return arrived
+        if self.spec.mode in BYTE_MODES:
+            return self.corrupt(arrived, key, tag=tag, start=start)
+        k0 = self._key(key, tag)
+        hit = jax.random.bernoulli(k0, float(self.spec.prob))
+        dirty = (jnp.zeros_like(arrived)
+                 if self.spec.mode == "drop_hop" else stale)
+        return jnp.where(hit, dirty, arrived)
+
+    # ---- verdict stream --------------------------------------------------
+    def note(self, tag: int, ok):
+        """Record one integrity verdict (traced bool; True = passed)."""
+        self._events.append(ok)
+
+    def take_flags(self):
+        """Drain the verdict stream -> bool[ n_noted ] (True = message
+        verified clean). Call INSIDE the trace that produced the notes;
+        an empty stream returns a zero-length array so callers can
+        reduce it unconditionally."""
+        ev, self._events = self._events, []
+        if not ev:
+            return jnp.zeros((0,), jnp.bool_)
+        return jnp.stack(ev)

@@ -1,0 +1,322 @@
+"""Recovery policies: wiring corruption DETECTION to ACTION.
+
+RecoveryConfig names the four policies the resilience plane implements:
+
+  resend                 a message whose Fletcher-32 check fails is
+                         replaced by the sender's clean re-encode
+                         (in-graph: the sender still holds the clean
+                         buffer — core.wire._receive_buffer);
+  dense_fallback_after   after N CONSECUTIVE steps with detected
+                         corruption, drop the compressed wire entirely
+                         and aggregate dense (no packed bytes => nothing
+                         for the fault plane to corrupt);
+  step_guard             a non-finite loss or aggregated gradient skips
+                         the parameter update AND rolls the EF residual
+                         back to its pre-step value (a skipped step must
+                         not advance error memory);
+  straggler_timeout_us   workers whose straggler delay exceeds the
+                         timeout are dropped from the step; the mean
+                         renormalizes over survivors and their EF rows
+                         freeze (partial participation).
+
+RecoveryManager is the host-side controller: it drains the per-step
+fault counters, applies the fallback policy, feeds the obs counters
+(resil/corrupt_detected, resil/resends, resil/steps_skipped), and
+exposes its decision state as a checkpointable dict.
+
+`train_resilient` is the reference loop threading all of it through
+SimCluster, with atomic checkpoints (params + EF + PRNG key + manager
+state) and the bitwise replay contract: train N steps == train k,
+kill, resume, train N-k — asserted leaf-for-leaf by the fault suite
+and BENCH_faults.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    resend: bool = True
+    dense_fallback_after: Optional[int] = None
+    step_guard: bool = True
+    straggler_timeout_us: Optional[float] = None
+
+    def __post_init__(self):
+        if (self.dense_fallback_after is not None
+                and self.dense_fallback_after < 1):
+            raise ValueError(f"dense_fallback_after must be >= 1 or None:"
+                             f" {self.dense_fallback_after}")
+        if (self.straggler_timeout_us is not None
+                and self.straggler_timeout_us < 0):
+            raise ValueError(f"negative straggler timeout: "
+                             f"{self.straggler_timeout_us}")
+
+
+class RecoveryManager:
+    """Host-side recovery controller + obs counter sink.
+
+    Lives OUTSIDE the traced step (like every SimCluster decision): it
+    consumes concrete per-step counters, keeps running totals, and
+    flips `fallback_active` once `dense_fallback_after` consecutive
+    corrupted steps have been seen — a Python-static decision, so the
+    fallback switches to a different compiled step function rather than
+    branching in-graph. `metrics` is the duck-typed obs.MetricsRegistry
+    (None = counters kept locally only).
+    """
+
+    _COUNTERS = ("resil/corrupt_detected", "resil/resends",
+                 "resil/steps_skipped")
+
+    def __init__(self, config: RecoveryConfig, *, metrics=None):
+        self.config = config
+        self.metrics = metrics
+        self.counters: Dict[str, int] = {k: 0 for k in self._COUNTERS}
+        self.consecutive_failures = 0
+        self.fallback_active = False
+
+    def observe(self, *, detected: int = 0, resends: int = 0,
+                skipped: int = 0) -> None:
+        """Fold one step's concrete counters in and update the
+        fallback decision."""
+        detected, resends, skipped = (int(detected), int(resends),
+                                      int(skipped))
+        self.counters["resil/corrupt_detected"] += detected
+        self.counters["resil/resends"] += resends
+        self.counters["resil/steps_skipped"] += skipped
+        if self.metrics is not None:
+            self.metrics.inc("resil/corrupt_detected", detected)
+            self.metrics.inc("resil/resends", resends)
+            self.metrics.inc("resil/steps_skipped", skipped)
+        if not self.fallback_active:
+            self.consecutive_failures = (self.consecutive_failures + 1
+                                         if detected > 0 else 0)
+            after = self.config.dense_fallback_after
+            if after is not None and self.consecutive_failures >= after:
+                self.fallback_active = True
+
+    # ---- checkpointable decision state -----------------------------------
+    def state(self) -> Dict[str, np.ndarray]:
+        """The manager's full decision state as an int64 leaf dict —
+        checkpointed next to params/EF so a resumed run replays the
+        SAME fallback decisions (part of the bitwise contract)."""
+        s = {k.replace("/", "_"): np.asarray(v, np.int64)
+             for k, v in self.counters.items()}
+        s["consecutive_failures"] = np.asarray(self.consecutive_failures,
+                                               np.int64)
+        s["fallback_active"] = np.asarray(int(self.fallback_active),
+                                          np.int64)
+        return s
+
+    def restore(self, state: Dict) -> None:
+        for k in self._COUNTERS:
+            self.counters[k] = int(np.asarray(state[k.replace("/", "_")]))
+        self.consecutive_failures = int(
+            np.asarray(state["consecutive_failures"]))
+        self.fallback_active = bool(
+            int(np.asarray(state["fallback_active"])))
+
+
+# --------------------------------------------------------------------------
+# the resilient training loop
+# --------------------------------------------------------------------------
+
+_CKPT_TAG = "resil"
+_STEP_RE = re.compile(r"_(\d+)_s\d+\.npz$")
+
+
+def _finite_tree(tree):
+    ok = jnp.array(True)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        ok = ok & jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+def train_resilient(runner, scenario, comp, *, steps: int, lr: float = 0.02,
+                    seed: int = 0, recovery: RecoveryConfig = None,
+                    ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                    resume: bool = False, metrics=None,
+                    grad_hook=None):
+    """Train `steps` steps of simulated-multi-worker compressed SGD under
+    `scenario`, with the full recovery stack.
+
+    `runner` follows the campaign protocol (benchmarks/scenarios.py):
+    `categories`, `global_batch`, `init(key)`, `loss(params, batch,
+    key)`, `worker_batch(key, props, per)`. `comp` is the
+    CompressionConfig (wire path: the aggregate runs wire=True so the
+    scenario's CorruptionSpec has real packed bytes to corrupt).
+
+    Every random draw is a pure function of (seed, step index) — no
+    iterator state — so resuming from a checkpoint at step k replays
+    steps k..N byte-for-byte: `train_resilient(..., steps=N)` ==
+    `train_resilient(..., steps=k, ckpt_every=k)` then
+    `train_resilient(..., steps=N, resume=True)`, leaf-for-leaf bitwise
+    (the fault suite asserts it). Checkpoints (atomic, digest-verified)
+    carry params, EF residuals, the PRNG key, and the RecoveryManager's
+    decision state under tag "resil" in `ckpt_dir`.
+
+    `grad_hook(worker_grads, step_key)` optionally perturbs the
+    per-worker gradients before aggregation in-graph (the step-guard
+    tests inject a non-finite step through it). Returns a result dict
+    (final params, EF, per-step losses, counters, manager).
+    """
+    from repro.ckpt import (latest_checkpoint, load_checkpoint,
+                            save_checkpoint)
+    from repro.core import build_plan, stacked_mask
+    from repro.data import dirichlet_proportions
+    from repro.sim import SimCluster, init_ef
+
+    recovery = RecoveryConfig() if recovery is None else recovery
+    manager = RecoveryManager(recovery, metrics=metrics)
+    cluster = SimCluster(scenario, comp)
+    key0 = jax.random.key(seed)
+
+    params = runner.init(key0)
+    sm = stacked_mask(params)
+    n_max = max([scenario.n_workers]
+                + [ev.world_size for ev in scenario.rescales])
+    alpha = scenario.dirichlet_alpha
+    props_all = (dirichlet_proportions(jax.random.fold_in(key0, 0xD),
+                                       n_max, runner.categories, alpha)
+                 if alpha is not None
+                 else jnp.full((n_max, runner.categories),
+                               1.0 / runner.categories))
+    start = 0
+    ef = init_ef(params, scenario.n_workers)
+
+    if resume:
+        if not ckpt_dir:
+            raise ValueError("resume=True requires ckpt_dir")
+        path = latest_checkpoint(ckpt_dir, tag=_CKPT_TAG)
+        if path is None:
+            raise ValueError(f"resume=True but no '{_CKPT_TAG}' "
+                             f"checkpoint under {ckpt_dir!r}")
+        m = _STEP_RE.search(path)
+        start = int(m.group(1))
+        like = {
+            "params": params,
+            "ef": init_ef(params, scenario.world_size_at(start - 1)
+                          if start > 0 else scenario.n_workers),
+            "key": jax.random.key_data(key0),
+            "manager": manager.state(),
+        }
+        ck_step, restored = load_checkpoint(path, like=like)
+        assert ck_step == start
+        params = restored["params"]
+        ef = restored["ef"]
+        key0 = jax.random.wrap_key_data(restored["key"])
+        manager.restore(restored["manager"])
+
+    # ONE injector serves every trace: its verdict stream is drained
+    # inside aggregate_simulated_workers' vmapped per-worker pass, so
+    # no tracer outlives its trace
+    injector = cluster.injector(resend=recovery.resend)
+
+    step_cache: Dict = {}
+
+    def build_step(n, per, fallback, alive_key):
+        ck = (n, per, fallback, alive_key)
+        if ck in step_cache:
+            return step_cache[ck]
+        alive = (None if alive_key is None
+                 else np.asarray(alive_key, bool))
+
+        @jax.jit
+        def step(params, ef, wbatch, key):
+            def one(b, k):
+                return jax.value_and_grad(
+                    lambda p: runner.loss(p, b, k))(params)
+            wkeys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(n))
+            losses, wg = jax.vmap(one)(wbatch, wkeys)
+            if grad_hook is not None:
+                wg = grad_hook(wg, key)
+            akey = jax.random.fold_in(key, 0xA)
+            zero = jnp.zeros((), jnp.int32)
+            info = {"messages": zero, "corrupt_detected": zero,
+                    "resends": zero}
+            if fallback:
+                # dense fallback: the compressed wire is abandoned, so
+                # Algorithm 1 degenerates to the (survivor-weighted)
+                # plain mean — no packed bytes, nothing to corrupt; EF
+                # residuals are carried untouched (a dense gradient has
+                # no compression error to remember)
+                if alive is None:
+                    g = jax.tree_util.tree_map(
+                        lambda x: jnp.mean(x, axis=0), wg)
+                else:
+                    w = jnp.asarray(alive, jnp.float32)
+                    w = w / jnp.sum(w)
+                    g = jax.tree_util.tree_map(
+                        lambda x: jnp.tensordot(
+                            w, x.astype(jnp.float32),
+                            axes=1).astype(x.dtype), wg)
+                new_ef = ef
+            else:
+                out = cluster.aggregate(
+                    wg, sm, akey,
+                    ef_state=ef if comp.error_feedback else None,
+                    wire=True, faults=injector, alive=alive)
+                g = out[0]
+                new_ef = out[1] if comp.error_feedback else ef
+                if injector is not None:
+                    info = out[-1]
+            loss = jnp.mean(losses)
+            new_params = jax.tree_util.tree_map(
+                lambda p, u: p - lr * u, params, g)
+            if recovery.step_guard:
+                finite = jnp.isfinite(loss) & _finite_tree(g)
+                new_params = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(finite, a, b), new_params,
+                    params)
+                new_ef = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(finite, a, b), new_ef, ef)
+                skipped = (1 - finite).astype(jnp.int32)
+            else:
+                skipped = jnp.zeros((), jnp.int32)
+            return new_params, new_ef, loss, skipped, info
+
+        step_cache[ck] = step
+        return step
+
+    losses = []
+    for i in range(start, steps):
+        n, ef, _changed = cluster.maybe_rescale(i, ef)
+        per = max(1, runner.global_batch // n)
+        wbatch = runner.worker_batch(jax.random.fold_in(key0, 100 + i),
+                                     props_all[:n], per)
+        alive = cluster.alive_mask(i, recovery.straggler_timeout_us)
+        alive_key = None if alive is None else tuple(bool(a) for a in alive)
+        fb = manager.fallback_active
+        step = build_step(n, per, fb, alive_key)
+        params, ef, loss, skipped, info = step(
+            params, ef, wbatch, jax.random.fold_in(key0, 10_000 + i))
+        losses.append(float(loss))
+        manager.observe(detected=int(info["corrupt_detected"]),
+                        resends=int(info["resends"]),
+                        skipped=int(skipped))
+        if metrics is not None:
+            metrics.observe("resil/loss", float(loss))
+            metrics.inc("resil/steps")
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, i + 1, {
+                "params": params, "ef": ef,
+                "key": jax.random.key_data(key0),
+                "manager": manager.state(),
+            }, tag=_CKPT_TAG)
+
+    return {
+        "params": params,
+        "ef": ef,
+        "losses": losses,
+        "counters": dict(manager.counters),
+        "fallback_active": manager.fallback_active,
+        "manager": manager,
+        "accounting": cluster.accounting,
+    }

@@ -3,6 +3,7 @@ cluster — hashable Scenario specs (heterogeneous links, stragglers,
 elastic world size, non-IID shards) wrapped around the Algorithm-1
 aggregation path without ever touching its numerics. See
 benchmarks/scenarios.py for the campaign runner."""
-from repro.sim.scenario import (DEFAULT_ALPHA_US, DEFAULT_GBPS, LinkSpec,
-                                RescaleEvent, Scenario, StragglerSpec)
+from repro.sim.scenario import (DEFAULT_ALPHA_US, DEFAULT_GBPS,
+                                CorruptionSpec, LinkSpec, RescaleEvent,
+                                Scenario, StragglerSpec)
 from repro.sim.cluster import SimCluster, init_ef

@@ -97,17 +97,56 @@ class SimCluster:
     # ------------------------------------------------------------------
     def aggregate(self, worker_grads, stacked, key, *, ef_state=None,
                   plan=None, schedule=None, telemetry_plan=None,
-                  telemetry_entire_model=True, wire=False):
+                  telemetry_entire_model=True, wire=False, faults=None,
+                  alive=None):
         """EXACTLY aggregate_simulated_workers — the scenario never
         reaches into a step's math (tests/test_scenarios.py holds this
         bit for bit across the codec zoo, both granularities, EF and
         wire). Fault injection happens around the step: time via
         step_accounting, shape via maybe_rescale, data via the
-        synthetic samplers."""
+        synthetic samplers — with ONE deliberate exception, the wire
+        plane: `faults` (an `injector()` built from the scenario's
+        CorruptionSpec) corrupts the packed bytes each receiver
+        decodes, and `alive` (an `alive_mask(...)` bool vector)
+        renormalizes the mean over surviving workers. Both default to
+        None = the bit-identical pass-through."""
         return aggregate_simulated_workers(
             worker_grads, stacked, self.cfg, key, ef_state=ef_state,
             plan=plan, schedule=schedule, telemetry_plan=telemetry_plan,
-            telemetry_entire_model=telemetry_entire_model, wire=wire)
+            telemetry_entire_model=telemetry_entire_model, wire=wire,
+            faults=faults, alive=alive)
+
+    # ------------------------------------------------------------------
+    # wire plane: corruption injection + partial participation
+    # ------------------------------------------------------------------
+    def injector(self, *, resend: bool = False):
+        """The resil.FaultInjector realizing the scenario's
+        CorruptionSpec, or None at identity (prob 0) so callers can
+        hand it straight to `aggregate(faults=...)` and keep the
+        fault-free graph untouched. Build ONE injector per traced step
+        function: it accumulates traced verdicts that must be drained
+        (take_flags) inside that trace."""
+        spec = self.scenario.corruption
+        if spec.is_identity():
+            return None
+        from repro.resil import FaultInjector
+        return FaultInjector(spec, resend=resend)
+
+    def alive_mask(self, step: int, timeout_us: Optional[float]):
+        """Partial participation under straggler timeout: worker i is
+        alive iff its straggler delay draw at `step` is within
+        `timeout_us`. None (or all workers timing out — a sync step
+        cannot proceed with nobody) returns None = full participation.
+        numpy bools, decided OUTSIDE the traced step like every other
+        scenario knob."""
+        if timeout_us is None:
+            return None
+        n = self.scenario.world_size_at(step)
+        delays = self.scenario.straggler.draws(step, n)
+        alive = delays <= float(timeout_us)
+        if not alive.any() or alive.all():
+            return None
+        return alive
 
     # ------------------------------------------------------------------
     # shape plane: elastic world size through ckpt/

@@ -19,7 +19,12 @@ only:
   * SHAPE/DATA — elastic rescale changes the worker axis between steps
     (EF residuals re-bucketed through ckpt/), Dirichlet skew changes
     which samples a worker sees (data/synthetic.py), never how a fixed
-    set of worker gradients aggregates.
+    set of worker gradients aggregates;
+  * WIRE (the one deliberate exception) — `CorruptionSpec` perturbs the
+    packed uint8 bytes a RECEIVER decodes (resil.FaultInjector via
+    SimCluster.injector()), the regime the integrity checksum +
+    recovery policies exist for. At prob 0 it injects nothing and the
+    identity contract holds unchanged.
 """
 from __future__ import annotations
 
@@ -73,6 +78,39 @@ class StragglerSpec:
         return np.where(hit, self.delay_us, 0.0)
 
 
+#: corruption modes resil.faults implements ("bitflip"/"truncate" hit
+#: any received message; "drop_hop"/"dup_hop" need the ring topology)
+CORRUPTION_MODES = ("bitflip", "truncate", "drop_hop", "dup_hop")
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptionSpec:
+    """Data-plane wire corruption: with probability `prob` per received
+    message (or per ring hop), perturb its packed uint8 bytes AFTER
+    encode — `n_bits` seeded bit flips, a truncated (zeroed) tail, a
+    dropped (zeroed) hop, or a duplicated (stale) hop. Draws are a pure
+    function of (step key, seed, message tag): replaying a scenario
+    replays its corruption byte for byte. Identity (prob 0) injects
+    nothing and must keep the aggregate bit-identical."""
+    prob: float = 0.0
+    mode: str = "bitflip"
+    n_bits: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"corruption prob must be in [0,1]: "
+                             f"{self.prob}")
+        if self.mode not in CORRUPTION_MODES:
+            raise ValueError(f"unknown corruption mode {self.mode!r}; "
+                             f"expected one of {CORRUPTION_MODES}")
+        if self.n_bits < 1:
+            raise ValueError(f"n_bits must be >= 1: {self.n_bits}")
+
+    def is_identity(self) -> bool:
+        return self.prob <= 0.0
+
+
 @dataclasses.dataclass(frozen=True)
 class RescaleEvent:
     """Elastic world-size change: BEFORE running `step`, the cluster
@@ -102,6 +140,7 @@ class Scenario:
     rescales: Tuple[RescaleEvent, ...] = ()
     dirichlet_alpha: Optional[float] = None
     data_seed: int = 0
+    corruption: CorruptionSpec = CorruptionSpec()
 
     def __post_init__(self):
         if self.n_workers < 1:
@@ -136,7 +175,8 @@ class Scenario:
                      or self.straggler.delay_us <= 0.0)
                 and all(ev.world_size == self.n_workers
                         for ev in self.rescales)
-                and self.dirichlet_alpha is None)
+                and self.dirichlet_alpha is None
+                and self.corruption.is_identity())
 
     def describe(self) -> str:
         parts = [f"n={self.n_workers}"]
@@ -150,4 +190,7 @@ class Scenario:
                 str(ev.world_size) for ev in self.rescales))
         if self.dirichlet_alpha is not None:
             parts.append(f"dirichlet={self.dirichlet_alpha}")
+        if not self.corruption.is_identity():
+            parts.append(f"corrupt({self.corruption.mode},"
+                         f"p={self.corruption.prob})")
         return f"{self.name}[{' '.join(parts)}]"
